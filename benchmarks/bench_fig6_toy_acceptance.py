@@ -1,0 +1,79 @@
+"""Paper Fig. 6: token-level acceptance on random toy distributions,
+GLS vs SpecTr vs SpecInfer vs the with-communication upper bound, as the
+number of drafts K varies."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import iid_draft_acceptance_upper, lml_bound
+from repro.specdec import (
+    draft_token_from_uniforms,
+    gls_verify,
+    specinfer_verify,
+    spectr_verify,
+)
+
+N = 10
+N_DISTS = 100       # paper: 100 random instances
+TRIALS = 200        # MC trials per instance
+KS = (1, 2, 4, 8, 16, 20)
+
+
+def _accept_rate(strategy: str, p, q, k: int, key) -> float:
+    def one(kk):
+        k_u, k_s = jax.random.split(kk)
+        log_u = jnp.log(jax.random.uniform(k_u, (k, N), minval=1e-37,
+                                           maxval=1.0))
+        d = draft_token_from_uniforms(log_u, jnp.broadcast_to(p, (k, N)))
+        active = jnp.ones((k,), bool)
+        qk = jnp.broadcast_to(q, (k, N))
+        pk = jnp.broadcast_to(p, (k, N))
+        if strategy == "gls":
+            return gls_verify(log_u, d, qk, active).accepted
+        if strategy == "specinfer":
+            return specinfer_verify(k_s, pk, d, qk, active).accepted
+        return spectr_verify(k_s, pk, d, qk, active).accepted
+    keys = jax.random.split(key, TRIALS)
+    return float(jnp.mean(jax.vmap(one)(keys)))
+
+
+def run(seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    rows = {}
+    t0 = time.perf_counter()
+    for k in KS:
+        accs = {s: [] for s in ("gls", "specinfer", "spectr")}
+        lmls, uppers = [], []
+        for i in range(N_DISTS):
+            kk = jax.random.fold_in(key, i * 100 + k)
+            kp, kq, kt = jax.random.split(kk, 3)
+            p = jax.random.dirichlet(kp, jnp.ones(N))
+            q = jax.random.dirichlet(kq, jnp.ones(N))
+            for s in accs:
+                accs[s].append(_accept_rate(s, p, q, k, kt))
+            lmls.append(float(lml_bound(p, q, k)))
+            uppers.append(float(iid_draft_acceptance_upper(p, q, k)))
+        rows[k] = {
+            "gls": float(np.mean(accs["gls"])),
+            "specinfer": float(np.mean(accs["specinfer"])),
+            "spectr": float(np.mean(accs["spectr"])),
+            "lml_bound": float(np.mean(lmls)),
+            "upper_bound": float(np.mean(uppers)),
+        }
+    us = (time.perf_counter() - t0) * 1e6 / (len(KS) * N_DISTS * 3)
+    for k, r in rows.items():
+        emit(f"fig6_toy_acceptance_K{k}", us,
+             f"gls={r['gls']:.3f};specinfer={r['specinfer']:.3f};"
+             f"spectr={r['spectr']:.3f};lml={r['lml_bound']:.3f};"
+             f"upper={r['upper_bound']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Roofline benchmark: reads the dry-run sweep artifacts (one JSON per
+arch x shape x mesh) and emits the per-device roofline terms — the data
+behind EXPERIMENTS.md §Roofline.
+
+Conventions (see EXPERIMENTS.md §Roofline notes):
+  * compute term uses ANALYTIC model FLOPs (XLA cost_analysis counts
+    lax.scan bodies once);
+  * memory term uses HLO bytes-accessed (weight streams are counted
+    exactly once per step by construction; CPU-backend bf16->f32 converts
+    inflate weight bytes ~2x, recorded as-is);
+  * collective term is loop-aware (while-loop trip counts parsed from the
+    HLO and propagated through nesting).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+SWEEP_DIR = os.path.join(os.path.dirname(__file__), "..", "dryrun_results",
+                         "sweep")
+
+
+def run(fast: bool = False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(SWEEP_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        pd = r["per_device"]
+        hlo_ratio = pd.get("model_flops_global", 0.0) / max(
+            pd.get("hlo_flops_scanbody", 0.0), 1.0)
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             r.get("compile_s", 0) * 1e6,
+             f"compute_s={rl['compute_s']:.3e};memory_s={rl['memory_s']:.3e};"
+             f"collective_s={rl['collective_s']:.3e};"
+             f"bound={rl['bottleneck']};model_vs_hlo_flops={hlo_ratio:.1f}")
+        rows.append(r)
+    if not rows:
+        emit("roofline_missing", 0.0,
+             "run repro.launch.sweep first (dryrun_results/sweep)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

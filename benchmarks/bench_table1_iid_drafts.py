@@ -1,0 +1,50 @@
+"""Paper Table 1/3: multi-draft speculative decoding with i.i.d. drafts —
+block efficiency (BE) per strategy and draft count K, on a trained
+target/drafter pair (CPU-scale stand-in for Qwen 7B/0.5B; see DESIGN.md
+§6).  Token-rate speedups are replaced by BE + verified-FLOP ratios since
+this container has no accelerator wall-clock."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.lm_pair import bench_prompts, get_pair
+from repro.specdec import SpecDecConfig, SpecDecEngine
+
+KS = (2, 8)
+STRATEGIES = ("gls", "gls_strong", "specinfer", "spectr", "daliri")
+L = 4
+MAX_NEW = 48
+N_PROMPTS = 3
+
+
+def run(fast: bool = False):
+    target, drafter = get_pair()
+    prompts = bench_prompts(N_PROMPTS)
+    ks = (8,) if fast else KS
+    rows = {}
+    for strategy in STRATEGIES:
+        for k in ks:
+            if strategy == "daliri" and k != ks[-1]:
+                continue
+            kk = 1 if strategy == "daliri" else k
+            eng = SpecDecEngine(
+                target, [drafter],
+                SpecDecConfig(num_drafts=kk, draft_len=L, strategy=strategy,
+                              top_k=50, max_new_tokens=MAX_NEW))
+            t0 = time.perf_counter()
+            stats = [eng.generate(jax.random.PRNGKey(100 + i), p)
+                     for i, p in enumerate(prompts)]
+            dt_us = (time.perf_counter() - t0) * 1e6 / len(prompts)
+            be = float(np.mean([s.block_efficiency for s in stats]))
+            rows[(strategy, kk)] = be
+            emit(f"table1_iid_{strategy}_K{kk}", dt_us, f"BE={be:.3f};L={L}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """``name,us_per_call,derived`` CSV row (harness contract)."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.elapsed * 1e6

@@ -1,0 +1,55 @@
+"""Shared trained target/drafter pair for the spec-dec benchmarks
+(CPU-scale stand-ins for the paper's Qwen 7B / 0.5B pair; cached under
+checkpoints/)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from repro.data import lm_dataset, synthetic_corpus, encode
+from repro.models import ModelConfig, init_params
+from repro.train import TrainConfig, load_checkpoint, save_checkpoint, train
+
+CKPT = os.path.join(os.path.dirname(__file__), "..", "checkpoints",
+                    "bench_lm.msgpack")
+
+VOCAB = 128
+
+TARGET_CFG = ModelConfig(
+    name="bench-target", family="dense", num_layers=4, d_model=256,
+    num_heads=8, num_kv_heads=4, head_dim=32, d_ff=512, vocab_size=VOCAB,
+    dtype="float32")
+# Deliberately weaker + briefly trained: the drafter must be meaningfully
+# misaligned with the target or every strategy saturates at BE = L+1.
+DRAFT_CFG = ModelConfig(
+    name="bench-drafter", family="dense", num_layers=1, d_model=96,
+    num_heads=4, num_kv_heads=2, head_dim=24, d_ff=192, vocab_size=VOCAB,
+    dtype="float32")
+
+
+def get_pair(steps: int = 200, log=lambda *_: None):
+    """Returns ((target_params, TARGET_CFG), (draft_params, DRAFT_CFG))."""
+    os.makedirs(os.path.dirname(CKPT), exist_ok=True)
+    if os.path.exists(CKPT):
+        ck = load_checkpoint(CKPT)
+        return (ck["target"], TARGET_CFG), (ck["drafter"], DRAFT_CFG)
+    tparams = init_params(jax.random.PRNGKey(0), TARGET_CFG)
+    dparams = init_params(jax.random.PRNGKey(1), DRAFT_CFG)
+    ds_t = lm_dataset(16, 128, VOCAB, seed=0, num_sentences=6000)
+    ds_d = lm_dataset(16, 128, VOCAB, seed=1, num_sentences=6000)
+    tc = TrainConfig(total_steps=steps, log_every=max(steps // 4, 1), lr=1e-3)
+    tparams, _ = train(tparams, TARGET_CFG, tc, ds_t, log=log)
+    tc_d = TrainConfig(total_steps=max(steps // 4, 1), lr=1e-3,
+                       log_every=max(steps // 4, 1))
+    dparams, _ = train(dparams, DRAFT_CFG, tc_d, ds_d, log=log)
+    save_checkpoint(CKPT, {"target": tparams, "drafter": dparams})
+    return (tparams, TARGET_CFG), (dparams, DRAFT_CFG)
+
+
+def bench_prompts(n: int = 4, length: int = 16) -> list:
+    toks = encode(synthetic_corpus(50, seed=7)) % VOCAB
+    return [np.asarray(toks[i * 37:i * 37 + length], np.int32)
+            for i in range(n)]

@@ -1,0 +1,52 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+Set REPRO_BENCH_FAST=0 for the full (slower) configurations.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_ablation_draft_len,
+        bench_fig2_gaussian,
+        bench_fig4_mnist,
+        bench_fig6_toy_acceptance,
+        bench_roofline,
+        bench_table1_iid_drafts,
+        bench_table2_diverse_drafts,
+    )
+    suites = [
+        ("fig6", bench_fig6_toy_acceptance),
+        ("table1", bench_table1_iid_drafts),
+        ("table2", bench_table2_diverse_drafts),
+        ("fig2", bench_fig2_gaussian),
+        ("fig4", bench_fig4_mnist),
+        ("ablation_L", bench_ablation_draft_len),
+        ("roofline", bench_roofline),
+    ]
+    failures = []
+    for name, mod in suites:
+        try:
+            if "fast" in mod.run.__code__.co_varnames:
+                mod.run(fast=FAST)
+            else:
+                mod.run()
+        except Exception:
+            failures.append(name)
+            print(f"{name}_FAILED,0.0,{traceback.format_exc(limit=1)!r}")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

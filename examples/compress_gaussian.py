@@ -1,0 +1,28 @@
+"""Wyner-Ziv compression of a Gaussian source with K decoders (paper
+Sec. 5 / Fig. 2): GLS vs the shared-randomness baseline across rates.
+
+Run:  PYTHONPATH=src python examples/compress_gaussian.py
+"""
+
+import jax
+
+from repro.compression import GaussianWZ, run_experiment
+
+
+def main():
+    cfg = GaussianWZ(sigma2_w_given_a=0.005, n_atoms=4096)
+    key = jax.random.PRNGKey(0)
+    print("rate(bits)  K  GLS match / D(dB)      baseline match / D(dB)")
+    for l_max in (2, 8, 32):
+        for k in (1, 2, 4):
+            g = run_experiment(key, cfg, k, l_max, trials=1500)
+            b = run_experiment(key, cfg, k, l_max, trials=1500,
+                               shared_sheet=True)
+            print(f"{g['rate_bits']:>9.0f} {k:>3}  "
+                  f"{g['match_prob_any']:.3f} / {g['distortion_db']:7.2f}    "
+                  f"{b['match_prob_any']:.3f} / {b['distortion_db']:7.2f}")
+    print("\nGLS == baseline at K=1; GLS wins for K>1, most at low rates.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: Gumbel-max List Sampling in 60 seconds.
+
+Reproduces the paper's core claim on toy distributions: coupling one
+target sample with K i.i.d. proposals via shared exponential races makes
+the acceptance probability grow with K, bounded below by the List
+Matching Lemma (Thm. 1) — while both marginals stay exact.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    gls_sample_batch,
+    iid_draft_acceptance_upper,
+    lml_bound,
+    maximal_coupling_acceptance,
+)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    kp, kq, ks = jax.random.split(key, 3)
+    n = 10
+    p = jax.random.dirichlet(kp, jnp.ones(n))   # Alice's (draft) dist
+    q = jax.random.dirichlet(kq, jnp.ones(n))   # Bob's (target) dist
+
+    print(f"alphabet N={n}, TV(p,q)={0.5 * float(jnp.abs(p - q).sum()):.3f}")
+    print(f"maximal coupling (WITH communication, K=1): "
+          f"{float(maximal_coupling_acceptance(p, q)):.3f}\n")
+    print(f"{'K':>3} {'empirical':>10} {'LML bound':>10} {'upper bound':>12}")
+    trials = 20_000
+    for k in (1, 2, 4, 8, 16):
+        out = gls_sample_batch(ks, p, q, k, trials)
+        acc = float(jnp.mean(out.accept))
+        lo = float(lml_bound(p, q, k))
+        hi = float(iid_draft_acceptance_upper(p, q, k))
+        print(f"{k:>3} {acc:>10.3f} {lo:>10.3f} {hi:>12.3f}")
+        assert acc >= lo - 0.01, "LML bound violated!"
+
+    # Marginals stay exact no matter what K is.
+    out = gls_sample_batch(ks, p, q, 8, trials)
+    y_hist = np.bincount(np.asarray(out.y), minlength=n) / trials
+    print(f"\nmax |empirical(Y) - q| = "
+          f"{float(np.abs(y_hist - np.asarray(q)).max()):.4f}  (exact marginals)")
+
+
+if __name__ == "__main__":
+    main()

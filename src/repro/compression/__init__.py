@@ -1,0 +1,25 @@
+"""Distributed lossy compression with side information (paper Sec. 5)."""
+
+from repro.compression.gaussian import GaussianWZ, run_experiment, simulate_trial
+from repro.compression.vae import (
+    VAETrainConfig,
+    compress_image,
+    evaluate_rd,
+    init_vae,
+    train_vae,
+)
+from repro.compression.wz import WZCode, make_bins, wz_round
+
+__all__ = [
+    "GaussianWZ",
+    "VAETrainConfig",
+    "WZCode",
+    "compress_image",
+    "evaluate_rd",
+    "init_vae",
+    "make_bins",
+    "run_experiment",
+    "simulate_trial",
+    "train_vae",
+    "wz_round",
+]

@@ -1,0 +1,42 @@
+"""Small conv/MLP building blocks for the β-VAE compression pipeline
+(paper Table 7), in pure JAX with NCHW conv layouts."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_params(key, c_in, c_out, k):
+    w = jax.random.normal(key, (c_out, c_in, k, k)) * jnp.sqrt(
+        2.0 / (c_in * k * k))
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def conv(p, x, stride=1, padding=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + p["b"][None, :, None, None]
+
+
+def upconv_params(key, c_in, c_out, k):
+    return conv_params(key, c_in, c_out, k)
+
+
+def upconv(p, x, stride=2, padding=1, out_padding=0):
+    """2x nearest-neighbour upsample + conv (resize-conv, the standard
+    checkerboard-free substitute for ConvTranspose2d)."""
+    b, c, h, w = x.shape
+    y = jnp.repeat(jnp.repeat(x, 2, axis=2), 2, axis=3)
+    return conv(p, y, 1, padding)
+
+
+def fc_params(key, d_in, d_out):
+    w = jax.random.normal(key, (d_in, d_out)) * jnp.sqrt(1.0 / d_in)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def fc(p, x):
+    return x @ p["w"] + p["b"]

@@ -1,0 +1,226 @@
+"""β-VAE distributed image compression (paper Sec. 5 "Lossy compression on
+MNIST" + App. D.3), adapted to the offline synthetic digit dataset.
+
+Pipeline (mirrors Phan et al. / the paper, Fig. 1):
+  * encoder net: source image (right half, 1x28x14) -> Gaussian posterior
+    p_{W|A} = N(e1(a), diag(e2(a))) over a 4-d latent; prior p_W = N(0, I).
+  * decoder net: (w, projected side-info features) -> reconstruction.
+  * projection net: 7x7 side-info crop -> 128-d features.
+  * estimator net: (w, side-info) -> sigmoid classifier of joint vs
+    product, whose odds h/(1-h) estimate the density ratio
+    p_{W|T}(w|t)/p_W(w) — exactly the decoder importance weight.
+  * coding: importance-sampled conditional GLS over N prior draws with
+    l_max bins (repro.compression.wz).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import nets as N
+from repro.compression.wz import make_bins, wz_round
+from repro.optim import adam_init, adam_update
+
+LATENT = 4
+
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+
+def init_vae(key):
+    ks = jax.random.split(key, 16)
+    return {
+        # Encoder: 1x28x14 -> mu/logvar in R^4.
+        "enc": {
+            "c1": N.conv_params(ks[0], 1, 64, 3),
+            "c2": N.conv_params(ks[1], 64, 64, 3),     # stride 2: 14x7
+            "c3": N.conv_params(ks[2], 64, 64, 3),     # stride 2: 7x4
+            "f1": N.fc_params(ks[3], 64 * 7 * 4, 256),
+            "f2": N.fc_params(ks[4], 256, 2 * LATENT),
+        },
+        # Decoder: (w 4) + (side feats 128) -> 1x28x14.
+        "dec": {
+            "f1": N.fc_params(ks[5], LATENT + 128, 256),
+            "f2": N.fc_params(ks[6], 256, 64 * 7 * 4),
+            "u1": N.upconv_params(ks[7], 64, 32, 3),   # 7x4 -> 14x8
+            "u2": N.upconv_params(ks[8], 32, 16, 3),   # 14x8 -> 28x16
+            "c_out": N.conv_params(ks[9], 16, 1, 3),
+        },
+        # Projection: 1x7x7 crop -> 128 features.
+        "proj": {
+            "c1": N.conv_params(ks[10], 1, 32, 3),
+            "c2": N.conv_params(ks[11], 32, 64, 3),    # stride 2: 4x4
+            "f1": N.fc_params(ks[12], 64 * 4 * 4, 128),
+        },
+        # Estimator: (w, side feats) -> logit of joint-vs-product.
+        "est": {
+            "f1": N.fc_params(ks[13], 128 + LATENT, 128),
+            "f2": N.fc_params(ks[14], 128, 128),
+            "f3": N.fc_params(ks[15], 128, 1),
+        },
+    }
+
+
+def encode(p, img):
+    """img: (B, 28, 14) -> (mu, logvar) each (B, 4)."""
+    x = img[:, None, :, :]
+    x = jax.nn.relu(N.conv(p["c1"], x, 1, 1))
+    x = jax.nn.relu(N.conv(p["c2"], x, 2, 1))
+    x = jax.nn.relu(N.conv(p["c3"], x, 2, 1))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(N.fc(p["f1"], x))
+    out = N.fc(p["f2"], x)
+    mu, logvar = out[:, :LATENT], out[:, LATENT:]
+    return mu, jnp.clip(logvar, -8.0, 4.0)
+
+
+def project(p, crop):
+    """crop: (B, 7, 7) -> (B, 128)."""
+    x = crop[:, None, :, :]
+    x = jax.nn.relu(N.conv(p["c1"], x, 1, 1))
+    x = jax.nn.relu(N.conv(p["c2"], x, 2, 1))
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(N.fc(p["f1"], x))
+
+
+def decode(p, w, feats):
+    """(B,4) latent + (B,128) side features -> (B, 28, 14) in [0,1]."""
+    x = jnp.concatenate([w, feats], axis=-1)
+    x = jax.nn.relu(N.fc(p["f1"], x))
+    x = jax.nn.relu(N.fc(p["f2"], x)).reshape(-1, 64, 7, 4)
+    x = jax.nn.relu(N.upconv(p["u1"], x))       # 7x4 -> 14x8
+    x = jax.nn.relu(N.upconv(p["u2"], x))       # 14x8 -> 28x16
+    x = N.conv(p["c_out"], x, 1, 1)[:, 0, :, :14]  # crop pad: 28x14
+    return jax.nn.sigmoid(x)
+
+
+def estimator_logit(p, w, feats):
+    x = jnp.concatenate([feats, w], axis=-1)
+    x = jax.nn.leaky_relu(N.fc(p["f1"], x))
+    x = jax.nn.leaky_relu(N.fc(p["f2"], x))
+    return N.fc(p["f3"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VAETrainConfig:
+    beta: float = 0.35
+    lr: float = 1e-3
+    steps: int = 400
+    batch: int = 64
+
+
+def vae_loss(params, key, source, crop, beta):
+    mu, logvar = encode(params["enc"], source)
+    eps = jax.random.normal(key, mu.shape)
+    w = mu + jnp.exp(0.5 * logvar) * eps
+    feats = project(params["proj"], crop)
+    recon = decode(params["dec"], w, feats)
+    mse = jnp.mean(jnp.sum((recon - source) ** 2, axis=(1, 2)))
+    kl = 0.5 * jnp.mean(jnp.sum(
+        jnp.exp(logvar) + mu ** 2 - 1.0 - logvar, axis=-1))
+    # Estimator BCE: joint pairs (w from posterior) vs product pairs
+    # (w shuffled across the batch).
+    logit_joint = estimator_logit(params["est"], w, feats)
+    w_shuf = jnp.roll(w, 1, axis=0)
+    logit_prod = estimator_logit(params["est"], w_shuf, feats)
+    bce = jnp.mean(jax.nn.softplus(-logit_joint)) + jnp.mean(
+        jax.nn.softplus(logit_prod))
+    return mse + beta * kl + bce, {"mse": mse, "kl": kl, "bce": bce}
+
+
+def train_vae(key, images: np.ndarray, cfg: VAETrainConfig, log=print):
+    """images: (n, 28, 28) synthetic digits.  Returns trained params."""
+    from repro.data.mnist import wz_split
+    params = init_vae(jax.random.fold_in(key, 0))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, key, source, crop):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: vae_loss(p, key, source, crop, cfg.beta),
+            has_aux=True)(params)
+        params, opt, _ = adam_update(params, grads, opt, cfg.lr)
+        return params, opt, loss, metrics
+
+    rng = np.random.default_rng(0)
+    for i in range(cfg.steps):
+        idx = rng.integers(0, len(images), cfg.batch)
+        src, crop = wz_split(images[idx], rng)
+        key, sub = jax.random.split(key)
+        params, opt, loss, metrics = step(params, opt, sub,
+                                          jnp.asarray(src), jnp.asarray(crop))
+        if i % 100 == 0 or i == cfg.steps - 1:
+            log(f"vae step {i:4d} loss {float(loss):.4f} "
+                f"mse {float(metrics['mse']):.4f} kl {float(metrics['kl']):.3f}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Coding with GLS
+# ---------------------------------------------------------------------------
+
+
+def compress_image(key, params, source, crops, *, n_atoms: int,
+                   l_max: int, k: int, shared_sheet: bool = False):
+    """Compress ONE source (28,14) for K decoders with crops (K,7,7).
+
+    Returns (recons (K,28,14), match (K,), mse_best)."""
+    k_atoms, k_bins, k_race = jax.random.split(key, 3)
+    atoms = jax.random.normal(k_atoms, (n_atoms, LATENT))   # U_i ~ p_W
+
+    mu, logvar = encode(params["enc"], source[None])
+    var = jnp.exp(logvar[0])
+    # log λ_q,i = log N(U_i; mu, var) - log N(U_i; 0, 1)
+    log_q = jnp.sum(-0.5 * (jnp.log(2 * jnp.pi * var)
+                            + (atoms - mu[0]) ** 2 / var), axis=-1)
+    log_prior = jnp.sum(-0.5 * (jnp.log(2 * jnp.pi) + atoms ** 2), axis=-1)
+    log_w_enc = log_q - log_prior
+
+    feats = project(params["proj"], crops)                  # (K, 128)
+    # Estimator odds stand in for p_{W|T}/p_W per (atom, decoder).
+    def dec_weights(f):
+        logits = estimator_logit(
+            params["est"], atoms, jnp.broadcast_to(f, (n_atoms, f.shape[-1])))
+        return logits  # log odds = log h/(1-h) = the classifier logit
+    log_w_dec = jax.vmap(dec_weights)(feats)                # (K, N)
+
+    bins = make_bins(k_bins, n_atoms, l_max)
+    code = wz_round(k_race, log_w_enc, log_w_dec, bins, k,
+                    shared_sheet=shared_sheet)
+    w_dec = atoms[code.x]                                   # (K, 4)
+    recons = decode(params["dec"], w_dec, feats)            # (K, 28, 14)
+    mse = jnp.mean((recons - source[None]) ** 2, axis=(1, 2))
+    return recons, code.match, jnp.min(mse)
+
+
+def evaluate_rd(key, params, images: np.ndarray, *, n_atoms: int = 512,
+                l_max: int = 16, k: int = 2, trials: int = 128,
+                shared_sheet: bool = False, seed: int = 0):
+    """Rate-distortion point over `trials` random test images."""
+    from repro.data.mnist import wz_split
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(images), trials)
+    mses, matches = [], []
+    fn = jax.jit(lambda kk, s, c: compress_image(
+        kk, params, s, c, n_atoms=n_atoms, l_max=l_max, k=k,
+        shared_sheet=shared_sheet))
+    for i, j in enumerate(idx):
+        img = images[j:j + 1]
+        srcs, crop0 = wz_split(np.repeat(img, k, 0), rng)
+        key, sub = jax.random.split(key)
+        _, match, mse = fn(sub, jnp.asarray(srcs[0]), jnp.asarray(crop0))
+        mses.append(float(mse))
+        matches.append(float(jnp.any(match)))
+    return {"rate_bits": float(np.log2(l_max)), "mse": float(np.mean(mses)),
+            "match_prob_any": float(np.mean(matches))}

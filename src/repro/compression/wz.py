@@ -1,0 +1,63 @@
+"""Wyner–Ziv-style distributed lossy compression with GLS (paper Sec. 5).
+
+One encoder broadcasts an ``log2(l_max)``-bit message to K decoders, each
+holding independent side information.  Samples live on N importance atoms
+(prior draws U_1..U_N with bin ids l_1..l_N); the encoder and decoders
+race shared Exp(1) sheets over their respective importance weights
+(App. C).  ``shared_sheet=True`` gives the paper's baseline where all
+decoders reuse sheet 0 (and the encoder races only sheet 0).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class WZCode(NamedTuple):
+    y: jax.Array          # encoder-selected atom index
+    message: jax.Array    # transmitted bin id  l_y
+    x: jax.Array          # (K,) decoder-selected atom indices
+    match: jax.Array      # (K,) bool — X^(k) == Y
+
+
+def _race_tables(key: jax.Array, k: int, n: int) -> jax.Array:
+    """log S for K sheets of N Exp(1) races."""
+    u = jax.random.uniform(key, (k, n), minval=jnp.finfo(jnp.float32).tiny,
+                           maxval=1.0)
+    return jnp.log(-jnp.log(u))
+
+
+def wz_round(
+    key: jax.Array,
+    log_w_enc: jax.Array,     # (N,)  log λ_q,i  (unnormalized ok)
+    log_w_dec: jax.Array,     # (K, N) log p_{W|T}(U_i | t_k)/p_W(U_i)
+    bins: jax.Array,          # (N,) int bin ids in [0, l_max)
+    k: int,
+    shared_sheet: bool = False,
+) -> WZCode:
+    """One encode/decode round.  Decoder weights are masked to the
+    transmitted bin (the 1{l_i = M} indicator)."""
+    n = log_w_enc.shape[-1]
+    log_s = _race_tables(key, k, n)
+    if shared_sheet:
+        enc_score = log_s[0] - log_w_enc
+        y = jnp.argmin(jnp.where(jnp.isfinite(log_w_enc), enc_score, jnp.inf))
+    else:
+        enc_score = jnp.min(log_s, axis=0) - log_w_enc
+        y = jnp.argmin(jnp.where(jnp.isfinite(log_w_enc), enc_score, jnp.inf))
+    message = bins[y]
+    bin_mask = bins == message
+    dec_w = jnp.where(bin_mask[None, :], log_w_dec, -jnp.inf)
+    sheets = log_s[0:1].repeat(k, axis=0) if shared_sheet else log_s
+    dec_score = sheets - dec_w
+    dec_score = jnp.where(jnp.isfinite(dec_w), dec_score, jnp.inf)
+    x = jnp.argmin(dec_score, axis=-1)
+    return WZCode(y=y.astype(jnp.int32), message=message,
+                  x=x.astype(jnp.int32), match=x == y)
+
+
+def make_bins(key: jax.Array, n: int, l_max: int) -> jax.Array:
+    return jax.random.randint(key, (n,), 0, l_max)

@@ -1,0 +1,15 @@
+"""granite-34b [dense] — llama-arch code model, MQA.  [arXiv:2405.04324]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,           # MQA
+    head_dim=128,
+    d_ff=24_576,
+    vocab_size=49_152,
+)

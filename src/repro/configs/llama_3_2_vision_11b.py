@@ -1,0 +1,19 @@
+"""llama-3.2-vision-11b [vlm] — llama text backbone with gated cross-attn
+image layers every 5th layer; ViT/projector stubbed (precomputed patch
+embeddings).  [hf:meta-llama/Llama-3.2-11B-Vision]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=128_256,
+    cross_attn_period=5,      # 8 cross-attn layers in 40
+    num_image_tokens=1600,    # stubbed ViT patch embeddings
+)

@@ -1,0 +1,19 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1 attn : 2
+recurrent.  [arXiv:2402.19427]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,            # 8 x (rec, rec, attn) + 2 trailing rec
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,           # MQA
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    pattern_rec=2,
+    local_window=2048,
+    lru_width=2560,
+)

@@ -1,0 +1,86 @@
+"""The four assigned input shapes and ShapeDtypeStruct input specs.
+
+  train_4k     seq_len=4096    global_batch=256   (training)
+  prefill_32k  seq_len=32768   global_batch=32    (inference prefill)
+  decode_32k   seq_len=32768   global_batch=128   (decode: 1 token, cache=seq)
+  long_500k    seq_len=524288  global_batch=1     (long-context decode)
+
+``input_specs(cfg, shape)`` returns {name: ShapeDtypeStruct} stand-ins for
+every model input — weak-type-correct, shardable, no device allocation.
+Decode shapes describe the *step* inputs only; the KV/SSM cache spec comes
+from ``cache_specs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# Sub-quadratic-decode archs eligible for long_500k (see DESIGN.md).
+LONG_CONTEXT_OK = ("mamba2-370m", "recurrentgemma-2b", "mixtral-8x22b")
+
+
+def supports_shape(cfg: ModelConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.name in LONG_CONTEXT_OK
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_len(cfg: ModelConfig, seq: int) -> int:
+    """Decoder token length: enc-dec archs cap at max_decoder_len (the long
+    dimension for them is the encoder/frames side)."""
+    if cfg.family == "encdec":
+        return min(seq, cfg.max_decoder_len)
+    return seq
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Model inputs for one (arch, shape) combination."""
+    b, s = shape.global_batch, shape.seq_len
+    act = cfg.activation_dtype
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": _sds((b, _token_len(cfg, s)), jnp.int32)}
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((b, s, cfg.d_model), act)
+        if cfg.family == "vlm":
+            specs["images"] = _sds((b, cfg.num_image_tokens, cfg.d_model), act)
+        if shape.kind == "train":
+            specs["targets"] = _sds(specs["tokens"].shape, jnp.int32)
+        return specs
+    # decode: one new token against a cache of length seq_len
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct pytree matching registry.init_cache(cfg, b, seq)."""
+    from repro.models import registry
+
+    def spec_of(leaf):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+
+    cache = jax.eval_shape(
+        lambda: registry.init_cache(cfg, shape.global_batch, shape.seq_len))
+    return jax.tree.map(spec_of, cache)

@@ -1,0 +1,16 @@
+"""smollm-360m [dense] — small llama-arch; also the drafter in the
+paper-scale speculative-decoding example.  [hf:HuggingFaceTB/SmolLM-135M]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,           # GQA
+    head_dim=64,
+    d_ff=2560,
+    vocab_size=49_152,
+)

@@ -1,0 +1,18 @@
+"""whisper-small [audio] — enc-dec transformer backbone, conv frontend
+stubbed (precomputed frame embeddings).  [arXiv:2212.04356]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    num_layers=12,            # decoder layers
+    encoder_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,          # full MHA
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51_865,        # padded to 51968 internally
+    max_decoder_len=448,
+)

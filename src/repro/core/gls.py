@@ -1,0 +1,188 @@
+"""Gumbel-max List Sampling (GLS) — the paper's core contribution (Sec. 3).
+
+Communication-free coupling between one target sample ``Y ~ q`` and a list
+of ``K`` i.i.d. proposal samples ``X^(1..K) ~ p`` built from shared
+exponential random numbers ``S_i^(k) = -ln U_i^(k)``:
+
+    X^(k) = argmin_i  S_i^(k) / p_i              (per-draft race)
+    Y     = argmin_i  min_k S_i^(k) / q_i        (target races over all K)
+
+Everything here is pure JAX (jit/vmap/grad-safe).  Numerics are done in
+log-space where it matters: ``S/p = exp(log S - log p)`` and argmin of the
+ratio equals argmin of ``log S - log p``, which avoids overflow for tiny
+probabilities.  Zero-probability symbols get ``-inf`` log-prob and are
+never selected (their race time is +inf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "exponential_races",
+    "gls_sample",
+    "gls_sample_heterogeneous",
+    "gls_conditional_encoder",
+    "gls_conditional_decoder",
+    "gls_importance_sample",
+    "GLSSample",
+]
+
+_NEG_INF = -jnp.inf
+
+
+class GLSSample(NamedTuple):
+    """Result of one GLS draw.
+
+    Attributes:
+      y: int32 — Bob's (target) sample index.
+      x: int32[K] — Alice's (proposal) sample indices.
+      accept: bool — whether ``y`` appears in ``x``.
+    """
+
+    y: jax.Array
+    x: jax.Array
+    accept: jax.Array
+
+
+def _log_uniform(key: jax.Array, shape) -> jax.Array:
+    """log(U) for U ~ Unif(0,1], safe against log(0)."""
+    u = jax.random.uniform(key, shape, minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
+    return jnp.log(u)
+
+
+def exponential_races(key: jax.Array, k: int, n: int) -> jax.Array:
+    """K sets of N shared race times in log-space: log S_i^(k), S ~ Exp(1).
+
+    ``S = -ln U`` so ``log S = log(-log U)``.  Returned shape ``(k, n)``.
+    """
+    log_u = _log_uniform(key, (k, n))
+    return jnp.log(-log_u)
+
+
+def _race_argmin(log_s: jax.Array, log_p: jax.Array) -> jax.Array:
+    """argmin_i S_i / p_i computed in log space along the last axis.
+
+    ``log(S_i/p_i) = log S_i - log p_i``; zero-prob symbols (log_p = -inf)
+    yield +inf and lose the race.
+    """
+    score = log_s - log_p
+    # Where p == 0 the score is +inf (or nan if log_s is -inf too); force +inf.
+    score = jnp.where(jnp.isnan(score), jnp.inf, score)
+    return jnp.argmin(score, axis=-1).astype(jnp.int32)
+
+
+def _safe_log(p: jax.Array) -> jax.Array:
+    return jnp.where(p > 0, jnp.log(jnp.maximum(p, jnp.finfo(p.dtype).tiny)), _NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def gls_sample(key: jax.Array, p: jax.Array, q: jax.Array, k: int) -> GLSSample:
+    """One GLS draw (Algorithm 1 of the paper).
+
+    Args:
+      key: PRNG key — the *shared* randomness between Alice and Bob.
+      p: proposal distribution, shape (N,).
+      q: target distribution, shape (N,).
+      k: number of proposal samples K.
+
+    Returns:
+      GLSSample(y, x[K], accept).
+    """
+    log_s = exponential_races(key, k, p.shape[-1])  # (K, N)
+    log_p = _safe_log(p)
+    log_q = _safe_log(q)
+    x = _race_argmin(log_s, log_p[None, :])  # (K,)
+    # Target: min over k first (in log space min of S == min of log S).
+    y = _race_argmin(jnp.min(log_s, axis=0), log_q)
+    accept = jnp.any(x == y)
+    return GLSSample(y=y, x=x, accept=accept)
+
+
+@jax.jit
+def gls_sample_heterogeneous(key: jax.Array, ps: jax.Array, q: jax.Array) -> GLSSample:
+    """GLS with K *different* proposal distributions (paper Prop. 5).
+
+    Args:
+      ps: (K, N) stack of proposal distributions.
+      q: (N,) target.
+    """
+    kk, n = ps.shape
+    log_s = exponential_races(key, kk, n)
+    x = _race_argmin(log_s, _safe_log(ps))  # row-wise race, (K,)
+    y = _race_argmin(jnp.min(log_s, axis=0), _safe_log(q))
+    accept = jnp.any(x == y)
+    return GLSSample(y=y, x=x, accept=accept)
+
+
+# ---------------------------------------------------------------------------
+# Conditional GLS (paper Sec. 5.2) — encoder/decoder split for compression.
+# The encoder and decoders hold the SAME race table (same key); the encoder
+# conditions on the source A, each decoder k races only its own sheet k
+# against its private target p(.|z_k).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def gls_conditional_encoder(key: jax.Array, q_given_a: jax.Array, k: int) -> jax.Array:
+    """Encoder side: Y = argmin_i min_k S_i^(k) / q_i(a).  Returns int32."""
+    log_s = exponential_races(key, k, q_given_a.shape[-1])
+    return _race_argmin(jnp.min(log_s, axis=0), _safe_log(q_given_a))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "which"))
+def gls_conditional_decoder(
+    key: jax.Array, p_given_z: jax.Array, k: int, which: int
+) -> jax.Array:
+    """Decoder ``which`` (0-based): X = argmin_i S_i^(which) / p_i(z)."""
+    log_s = exponential_races(key, k, p_given_z.shape[-1])
+    return _race_argmin(log_s[which], _safe_log(p_given_z))
+
+
+# ---------------------------------------------------------------------------
+# Importance-sampling extension (paper App. C) — continuous targets.
+# N i.i.d. prior samples U_1..U_N ~ p_W plus unnormalized weights stand in
+# for an enumerated alphabet; races run over normalized weights.
+# ---------------------------------------------------------------------------
+
+
+def gls_importance_sample(
+    key: jax.Array,
+    log_w_q: jax.Array,
+    log_w_p: jax.Array,
+    k: int,
+) -> GLSSample:
+    """GLS over importance-weighted atoms.
+
+    Args:
+      log_w_q: (N,) unnormalized log importance weights for the encoder
+        target, ``log p_{B|A}(B_i|a) - log p_B(B_i)``.
+      log_w_p: (K, N) per-decoder unnormalized log weights,
+        ``log p_{B|Z}(B_i|z_k) - log p_B(B_i)``.  -inf marks masked atoms
+        (e.g. bin mismatch 1{l_i != l_j}).
+      k: number of decoders.
+
+    Note: argmin of S/λ is invariant to the normalizing constant of λ, so
+    we can race directly on unnormalized weights.
+    """
+    n = log_w_q.shape[-1]
+    log_s = exponential_races(key, k, n)
+    y = _race_argmin(jnp.min(log_s, axis=0), log_w_q)
+    x = _race_argmin(log_s, log_w_p)
+    accept = jnp.any(x == y)
+    return GLSSample(y=y, x=x, accept=accept)
+
+
+# ---------------------------------------------------------------------------
+# Batched helpers used by the spec-dec engine and the benchmarks.
+# ---------------------------------------------------------------------------
+
+
+def gls_sample_batch(key: jax.Array, p: jax.Array, q: jax.Array, k: int, batch: int):
+    """vmap of gls_sample over `batch` independent trials (fresh keys)."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda kk: gls_sample(kk, p, q, k))(keys)

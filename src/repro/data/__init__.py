@@ -1,0 +1,19 @@
+"""Offline data pipelines: synthetic text corpus + MNIST-like digits."""
+
+from repro.data.mnist import digits_dataset, wz_split
+from repro.data.text import (
+    BOS,
+    EOS,
+    PAD,
+    VOCAB_SIZE,
+    PackedDataset,
+    decode,
+    encode,
+    lm_dataset,
+    synthetic_corpus,
+)
+
+__all__ = [
+    "BOS", "EOS", "PAD", "VOCAB_SIZE", "PackedDataset", "decode",
+    "digits_dataset", "encode", "lm_dataset", "synthetic_corpus", "wz_split",
+]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel directory holds kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper with jnp fallback) and ref.py (pure-jnp oracle).
+All are validated in interpret=True mode on CPU; on TPU pass
+interpret=False.
+"""
+
+from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.gls_race.ops import gls_race_op
+from repro.kernels.ssd_chunk.ops import ssd_chunk_op, ssd_chunked_kernel
+
+__all__ = ["decode_attention_op", "flash_attention_op", "gls_race_op",
+           "ssd_chunk_op", "ssd_chunked_kernel"]

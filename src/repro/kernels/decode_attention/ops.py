@@ -1,0 +1,15 @@
+"""jit'd public wrapper for decode attention with a jnp fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention_op(q, k, v, kv_len, *, use_kernel: bool = True,
+                        interpret: bool = True):
+    if use_kernel:
+        return decode_attention(q, k, v, kv_len, interpret=interpret)
+    return jax.jit(decode_attention_ref)(q, k, v, kv_len)

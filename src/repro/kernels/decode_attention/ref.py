@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache
+with a valid-prefix length."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """q: (B, H, D) one query per head; k/v: (B, Hkv, T, D);
+    kv_len: (B,) valid prefix length.  Returns (B, H, D)."""
+    b, h, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    qr = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhtd->bhgt", qr, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d)
+    valid = jnp.arange(t)[None, :] < kv_len[:, None]     # (B, T)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention (prefill) kernel with GQA, causal and
+sliding-window masking.
+
+Tiling: grid (B, H, S/TQ, T/TK); online-softmax carry (m, l, acc) lives in
+VMEM scratch across the sequential KV-tile axis.  Block shapes keep the
+MXU busy (TQ x D and TK x D tiles, lane dim = head_dim, sublane = seq) and
+the working set ~ (TQ + 2*TK) * D * 4B well under VMEM.  KV heads are
+indexed as h // group so grouped query heads reuse the same KV tiles
+(no repeated-KV materialization in HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TQ = 256
+DEFAULT_TK = 256
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            tq: int, tk: int, n_kv: int, causal: bool, window: int,
+            t_real: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # (TQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)      # (TK, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    d = q.shape[-1]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(d))
+    q_pos = iq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    k_pos = ik * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    mask = k_pos < t_real
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "tq", "tk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    tq = min(tq, s)
+    tk = min(tk, t)
+    if s % tq:
+        qpad = tq - s % tq
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    if t % tk:
+        kpad = tk - t % tk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    s_pad, t_pad = q.shape[2], k.shape[2]
+    n_q, n_kv = s_pad // tq, t_pad // tk
+
+    kernel = functools.partial(_kernel, tq=tq, tk=tk, n_kv=n_kv,
+                               causal=causal, window=window, t_real=t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, tk, d),
+                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, tk, d),
+                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((tq, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((tq, d), jnp.float32),   # running numerator acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s]

@@ -1,0 +1,19 @@
+"""jit'd public wrapper for flash attention with a jnp fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=0,
+                       use_kernel: bool = True, interpret: bool = True):
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+    fn = functools.partial(flash_attention_ref, causal=causal, window=window)
+    return jax.jit(fn)(q, k, v)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention prefill kernel: exact GQA
+attention with causal and sliding-window masking."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D).  f32 math, returns q.dtype."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    qr = q.reshape(b, hkv, g, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgsd,bhtd->bhgst", qr, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d)
+    q_pos = jnp.arange(s)
+    k_pos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the GLS race (the paper's verification hot op).
+
+TPU adaptation (DESIGN.md §3): the vocabulary axis (up to 256k) is tiled
+into VMEM-sized blocks (lane-aligned, multiples of 128); the
+``log S - log p`` transform is fused with a running (min, argmin)
+reduction held in VMEM scratch, so the (K, N) race table never makes a
+second HBM round trip.  The K-way min for the target rides the sublane
+dimension of the same pass.
+
+Grid: (B, N // TILE_N); each program reduces one vocab tile for one batch
+row.  Scratch carries the running draft minima (K,) and the target
+minimum (scalar) across the vocab-tile loop (sequential minor grid axis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE_N = 2048
+
+
+def _kernel(log_s_ref, log_p_ref, log_q_ref, active_ref,
+            x_ref, y_ref,
+            dmin_ref, dargs_ref, tmin_ref, targ_ref,
+            *, tile_n: int, n_tiles: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        dmin_ref[...] = jnp.full_like(dmin_ref, jnp.inf)
+        dargs_ref[...] = jnp.zeros_like(dargs_ref)
+        tmin_ref[...] = jnp.full_like(tmin_ref, jnp.inf)
+        targ_ref[...] = jnp.zeros_like(targ_ref)
+
+    log_s = log_s_ref[0]          # (K, TILE_N)
+    log_p = log_p_ref[0]
+    log_q = log_q_ref[0]
+    active = active_ref[0]        # (K, 1) f32 mask (1=active)
+
+    # --- draft races: per-k argmin of log_s - log_p ---
+    dscore = log_s - log_p
+    dscore = jnp.where(log_p > -jnp.inf, dscore, jnp.inf)
+    tile_dmin = jnp.min(dscore, axis=1)                      # (K,)
+    tile_darg = jnp.argmin(dscore, axis=1).astype(jnp.int32)
+    tile_didx = t * tile_n + tile_darg
+    better = tile_dmin < dmin_ref[:, 0]
+    dmin_ref[:, 0] = jnp.where(better, tile_dmin, dmin_ref[:, 0])
+    dargs_ref[:, 0] = jnp.where(better, tile_didx, dargs_ref[:, 0])
+
+    # --- target race: argmin over (k, n) of log_s - log_q, active only ---
+    tscore = log_s - log_q
+    tscore = jnp.where(log_q > -jnp.inf, tscore, jnp.inf)
+    tscore = jnp.where(active > 0, tscore, jnp.inf)
+    col_min = jnp.min(tscore, axis=0)                        # (TILE_N,)
+    tile_tmin = jnp.min(col_min)
+    tile_targ = t * tile_n + jnp.argmin(col_min).astype(jnp.int32)
+    tbetter = tile_tmin < tmin_ref[0, 0]
+    tmin_ref[0, 0] = jnp.where(tbetter, tile_tmin, tmin_ref[0, 0])
+    targ_ref[0, 0] = jnp.where(tbetter, tile_targ, targ_ref[0, 0])
+
+    @pl.when(t == n_tiles - 1)
+    def _emit():
+        x_ref[0, :] = dargs_ref[:, 0]
+        y_ref[0, 0] = targ_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def gls_race(log_s: jax.Array, log_p: jax.Array, log_q: jax.Array,
+             active: jax.Array, *, tile_n: int = DEFAULT_TILE_N,
+             interpret: bool = True):
+    """log_s/log_p/log_q: (B, K, N) f32; active: (B, K) bool.
+
+    Returns (x (B, K) i32, y (B,) i32).  ``interpret=True`` runs the
+    kernel body on CPU (this container); on TPU pass interpret=False.
+    """
+    b, k, n = log_s.shape
+    if n % tile_n:
+        pad = tile_n - n % tile_n
+        neg = jnp.float32(-jnp.inf)
+        log_s = jnp.pad(log_s, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=0.0)
+        log_p = jnp.pad(log_p, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=neg)
+        log_q = jnp.pad(log_q, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=neg)
+        n = n + pad
+    n_tiles = n // tile_n
+    active_f = active.astype(jnp.float32)[..., None]  # (B, K, 1)
+
+    kernel = functools.partial(_kernel, tile_n=tile_n, n_tiles=n_tiles)
+    x, y = pl.pallas_call(
+        kernel,
+        grid=(b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, k, tile_n), lambda i, t: (i, 0, t)),
+            pl.BlockSpec((1, k, tile_n), lambda i, t: (i, 0, t)),
+            pl.BlockSpec((1, k, tile_n), lambda i, t: (i, 0, t)),
+            pl.BlockSpec((1, k, 1), lambda i, t: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k, 1), jnp.float32),    # running draft minima
+            pltpu.VMEM((k, 1), jnp.int32),      # running draft argmins
+            pltpu.VMEM((1, 1), jnp.float32),    # running target min
+            pltpu.VMEM((1, 1), jnp.int32),      # running target argmin
+        ],
+        interpret=interpret,
+    )(log_s, log_p, log_q, active_f)
+    return x, y[:, 0]

@@ -1,0 +1,15 @@
+"""jit'd public wrapper for the GLS race kernel with a jnp fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gls_race.kernel import gls_race
+from repro.kernels.gls_race.ref import gls_race_ref
+
+
+def gls_race_op(log_s, log_p, log_q, active, *, use_kernel: bool = True,
+                interpret: bool = True):
+    if use_kernel:
+        return gls_race(log_s, log_p, log_q, active, interpret=interpret)
+    return jax.jit(gls_race_ref)(log_s, log_p, log_q, active)

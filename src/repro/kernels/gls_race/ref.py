@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the GLS race kernel.
+
+Given shared race times in log space (log S, S~Exp(1)), per-draft log
+proposal probs and per-draft log target probs, compute
+
+  x[b, k] = argmin_n  exp(log_s[b,k,n] - log_p[b,k,n])     (draft races)
+  y[b]    = argmin_n  min_{k active}
+                      exp(log_s[b,k,n] - log_q[b,k,n])     (target race)
+
+-inf log-probs mark zero-probability symbols (never selected).  Ties are
+broken toward the lower index (argmin semantics), matching the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gls_race_ref(log_s: jax.Array, log_p: jax.Array, log_q: jax.Array,
+                 active: jax.Array):
+    """log_s/log_p/log_q: (B, K, N) f32; active: (B, K) bool.
+
+    Returns (x (B, K) i32, y (B,) i32).
+    """
+    draft_score = log_s - log_p
+    draft_score = jnp.where(jnp.isfinite(log_p), draft_score, jnp.inf)
+    x = jnp.argmin(draft_score, axis=-1).astype(jnp.int32)
+
+    tgt_score = log_s - log_q
+    tgt_score = jnp.where(jnp.isfinite(log_q), tgt_score, jnp.inf)
+    tgt_score = jnp.where(active[..., None], tgt_score, jnp.inf)
+    flat = jnp.min(tgt_score, axis=1)           # min over k: (B, N)
+    y = jnp.argmin(flat, axis=-1).astype(jnp.int32)
+    return x, y

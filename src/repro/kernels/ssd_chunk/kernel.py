@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk computation.
+
+Per grid cell (batch, chunk, head) the kernel holds one chunk's tiles in
+VMEM — x (Q, P), dt (Q,), B/C (Q, N) — and runs three MXU matmuls:
+
+  cb      = C @ B^T                       (Q x N) x (N x Q)  -> (Q, Q)
+  y_intra = (cb ⊙ L_decay) @ (x·dt)       (Q x Q) x (Q x P)  -> (Q, P)
+  state   = (B ⊙ rem)^T @ (x·dt)          (N x Q) x (Q x P)  -> (N, P)
+
+with the decay matrix L built from the in-chunk cumulative log-decays
+(double-where masked so no inf leaks).  Q, N, P are all 64-256 —
+MXU-aligned tiles, working set ≈ (2QN + QP + Q² + NP)·4B « VMEM.  The
+O(seq) inter-chunk recurrence stays in jnp (lax.scan over chunk
+boundaries), exactly as in the pure-jnp model path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, tot_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)     # (Q,)
+    a = a_ref[0]                                    # scalar
+    b = b_ref[0, 0].astype(jnp.float32)             # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)             # (Q, N)
+    q = x.shape[0]
+
+    la = dt * a
+    cum = jnp.cumsum(la)
+    total = cum[-1]
+
+    li = cum[:, None]
+    lj = cum[None, :]
+    mask = li >= lj  # lower-triangular in time (cum is non-increasing-ish)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    diff = jnp.where(tri, li - lj, 0.0)
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    xdt = x * dt[:, None]                                      # (Q, P)
+    y = jnp.dot(cb * decay, xdt, preferred_element_type=jnp.float32)
+
+    rem = jnp.exp(total - cum)                                 # (Q,)
+    state = jnp.dot((b * rem[:, None]).T, xdt,
+                    preferred_element_type=jnp.float32)        # (N, P)
+
+    y_ref[0, 0, :, 0, :] = y
+    st_ref[0, 0, 0] = state.T                                  # (P, N)
+    tot_ref[0, 0, 0] = total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, a, b_in, c_in, *, interpret: bool = True):
+    """x: (B, NC, Q, H, P); dt: (B, NC, Q, H) f32; a: (H,) f32;
+    b_in/c_in: (B, NC, Q, N).  Returns (y_intra, states, total) matching
+    ref.ssd_chunk_ref."""
+    bsz, nc, q, h, p = x.shape
+    n = b_in.shape[-1]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(bsz, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda b, c, hh: (b, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda b, c, hh: (b, c, 0, hh)),
+            pl.BlockSpec((1,), lambda b, c, hh: (hh,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, q, n), lambda b, c, hh: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda b, c, hh: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda b, c, hh: (b, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda b, c, hh: (b, c, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c, hh: (b, c, hh),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, b_in, c_in)
+    return out

@@ -1,0 +1,60 @@
+"""jit'd wrapper for the SSD intra-chunk kernel with a jnp fallback, plus
+a full chunked-SSD entry point (kernel intra + jnp inter-chunk scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+
+
+def ssd_chunk_op(x, dt, a, b_in, c_in, *, use_kernel: bool = True,
+                 interpret: bool = True):
+    if use_kernel:
+        return ssd_chunk(x, dt, a, b_in, c_in, interpret=interpret)
+    return jax.jit(ssd_chunk_ref)(x, dt, a, b_in, c_in)
+
+
+def ssd_chunked_kernel(x, dt, a, b_in, c_in, chunk: int, h0=None, *,
+                       interpret: bool = True):
+    """Drop-in twin of models.mamba2.ssd_chunked with the intra-chunk work
+    on the Pallas kernel.  x: (B, S, H, P); see mamba2.ssd_chunked."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    q = chunk
+    if s % q:
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    s_pad = x.shape[1]
+    nc = s_pad // q
+    xs = x.reshape(bsz, nc, q, h, p)
+    dts = dt.reshape(bsz, nc, q, h)
+    bs = b_in.reshape(bsz, nc, q, n)
+    cs = c_in.reshape(bsz, nc, q, n)
+
+    y_intra, states, total = ssd_chunk(xs, dts, a, bs, cs,
+                                       interpret=interpret)
+
+    def step(h_prev, xs_c):
+        tot_c, st_c = xs_c
+        h_in = h_prev
+        h_out = h_prev * jnp.exp(tot_c)[:, :, None, None] + st_c
+        return h_out, h_in
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_final, h_ins = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (total.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_ins = h_ins.transpose(1, 0, 2, 3, 4)
+
+    cum = jnp.cumsum(dts * a[None, None, None, :], axis=2)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         cs.astype(jnp.float32), h_ins, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), h_final

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel: for each
+(batch, chunk, head) tile compute the decay-masked quadratic output and
+the chunk summary state (Mamba-2 / SSD, arXiv:2405.21060)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dt, a, b_in, c_in):
+    """x: (B, NC, Q, H, P); dt: (B, NC, Q, H) f32 (already softplus'd);
+    a: (H,) f32 negative; b_in/c_in: (B, NC, Q, N).
+
+    Returns (y_intra (B,NC,Q,H,P) f32, states (B,NC,H,P,N) f32,
+             total (B,NC,H) f32 log-decay across each chunk).
+    """
+    q = x.shape[2]
+    la = dt * a[None, None, None, :]
+    cum = jnp.cumsum(la, axis=2)
+    total = cum[:, :, -1]
+    li = cum[:, :, :, None, :]
+    lj = cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    diff = jnp.where(mask, li - lj, 0.0)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", c_in.astype(jnp.float32),
+                    b_in.astype(jnp.float32))
+    w = cb[..., None] * decay
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xdt)
+    rem = jnp.exp(total[:, :, None, :] - cum)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        rem, b_in.astype(jnp.float32), xdt)
+    return y_intra, states, total

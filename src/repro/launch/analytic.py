@@ -1,0 +1,40 @@
+"""Analytic FLOP model: MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference),
+with N the parameter count (active params for MoE).  Used for the
+roofline compute term because XLA's cost_analysis counts lax.scan bodies
+once, under-reporting scanned models by ~num_layers (see
+EXPERIMENTS.md §Roofline notes)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.shapes import SHAPES, InputShape
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(
+        lambda: registry.init_params(jax.random.PRNGKey(0), cfg))
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    n = param_count(cfg)
+    if cfg.num_experts:
+        expert = cfg.num_layers * cfg.num_experts * 3 * cfg.d_model * cfg.d_ff
+        n = n - expert + expert * cfg.experts_per_token / cfg.num_experts
+    return float(n)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tl = (min(shape.seq_len, cfg.max_decoder_len)
+              if cfg.family == "encdec" else shape.seq_len)
+        return 6.0 * n * shape.global_batch * tl
+    if shape.kind == "prefill":
+        tl = (min(shape.seq_len, cfg.max_decoder_len)
+              if cfg.family == "encdec" else shape.seq_len)
+        return 2.0 * n * shape.global_batch * tl
+    return 2.0 * n * shape.global_batch  # decode: one token per row

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+combination on the production meshes, proving the distribution config is
+coherent, and record memory/cost/collective analyses for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+      --shape decode_32k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all      # everything
+
+The XLA_FLAGS line above MUST run before any jax import (device count is
+locked at first init); that is why it is the first statement of the file.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, all_configs, get_config, input_specs, supports_shape
+from repro.launch.hlo_analysis import collective_stats, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.optim import AdamState
+from repro.sharding import batch_shardings, cache_shardings, params_shardings
+from repro.sharding.context import activation_sharding
+from repro.sharding.rules import dp_axes
+
+
+def _params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: registry.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _cache_specs(cfg: ModelConfig, shape):
+    return jax.eval_shape(
+        lambda: registry.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def _opt_specs(params_shape):
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_shape)
+    return AdamState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(lambda x: x, zeros))
+
+
+def build_lowerable(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns (fn, arg_shapes, in_shardings) for one (arch, shape)."""
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    params_shape = _params_specs(cfg)
+    train = shape.kind == "train"
+    p_shard = params_shardings(params_shape, cfg, mesh, train=train)
+    b_shard = batch_shardings(specs, mesh)
+
+    if shape.kind == "train":
+        from repro.train.loop import TrainConfig, lm_loss
+        from repro.optim import adam_update
+        tcfg = TrainConfig()
+        opt_shape = _opt_specs(params_shape)
+        o_shard = AdamState(
+            step=jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            mu=params_shardings(opt_shape.mu, cfg, mesh, train=True),
+            nu=params_shardings(opt_shape.nu, cfg, mesh, train=True),
+        )
+
+        def train_step(params, opt, batch):
+            def loss_fn(p):
+                return lm_loss(p, cfg, batch, z_loss=tcfg.z_loss)
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, opt, _ = adam_update(params, grads, opt, 1e-4,
+                                         weight_decay=0.01)
+            return params, opt, loss
+
+        return train_step, (params_shape, opt_shape, specs), \
+            (p_shard, o_shard, b_shard)
+
+    cache_shape = _cache_specs(cfg, shape)
+    c_shard = cache_shardings(cache_shape, cfg, mesh)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch, cache):
+            return registry.prefill(params, cfg, batch, cache)
+        return prefill_step, (params_shape, specs, cache_shape), \
+            (p_shard, b_shard, c_shard)
+
+    def decode_step(params, tokens, cache):
+        return registry.decode_step(params, cfg, tokens, cache)
+    return decode_step, (params_shape, specs["tokens"], cache_shape), \
+        (p_shard, b_shard["tokens"], c_shard)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not supports_shape(cfg, shape_name):
+        result["status"] = "skipped"
+        result["reason"] = ("long_500k requires sub-quadratic decode; "
+                            "see DESIGN.md")
+        return result
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, arg_shapes, in_shardings = build_lowerable(cfg, shape_name, mesh)
+        # Pin the layer-scan carry sharding: GSPMD otherwise drops the
+        # batch sharding inside the scanned blocks and replicates
+        # activations (observed: full-batch f32 score tensors).  Training
+        # additionally shards the sequence dim over "model"
+        # (sequence-parallel) to shrink the per-layer remat stash.
+        import numpy as np
+        dp = dp_axes(mesh)
+        dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+        shape = SHAPES[shape_name]
+        batch_axes = dp if shape.global_batch % dp_total == 0 else (
+            "data" if shape.global_batch % int(mesh.shape["data"]) == 0
+            else None)
+        if shape.kind == "train":
+            # sequence-parallel: decoder token length must divide "model".
+            from repro.configs.shapes import _token_len
+            seq_axes = ("model" if _token_len(cfg, shape.seq_len)
+                        % int(mesh.shape["model"]) == 0 else None)
+            carry = P(batch_axes, seq_axes, None)
+        else:
+            carry = P(batch_axes, None, None)
+        enc_seq_ok = shape.seq_len % int(mesh.shape["model"]) == 0
+        hooks = {
+            "layer_carry": carry,
+            "enc_carry": P(batch_axes,
+                           "model" if (shape.kind != "decode" and enc_seq_ok)
+                           else None, None),
+        }
+        with mesh, activation_sharding(hooks):
+            lowered = jax.jit(fn, in_shardings=in_shardings).lower(*arg_shapes)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        hlo_flops = float(cost.get("flops", 0.0))
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+        # Compute term from the ANALYTIC model FLOPs: XLA counts scan
+        # bodies once, under-reporting scanned models by ~num_layers.
+        from repro.launch.analytic import model_flops
+        chips = 512 if multi_pod else 256
+        mflops = model_flops(cfg, shape)
+        flops_per_device = mflops / chips
+        terms = roofline_terms(flops_per_device, bytes_accessed,
+                               coll["total_bytes"])
+        result.update({
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "per_device": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "flops": flops_per_device,
+                "hlo_flops_scanbody": hlo_flops,
+                "model_flops_global": mflops,
+                "bytes_accessed": bytes_accessed,
+                "collective_bytes": coll["total_bytes"],
+            },
+            "collectives": {k: v for k, v in coll.items() if k != "counts"},
+            "collective_counts": coll["counts"],
+            "roofline": terms,
+        })
+    except Exception as e:  # record failures — they are bugs to fix
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    runs = []
+    if args.all:
+        for arch in all_configs():
+            for shape_name in SHAPES:
+                for mp in (False, True):
+                    runs.append((arch, shape_name, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        runs.append((args.arch, args.shape, args.multi_pod))
+
+    results = []
+    for arch, shape_name, mp in runs:
+        r = run_one(arch, shape_name, multi_pod=mp)
+        results.append(r)
+        status = r["status"]
+        extra = ""
+        if status == "ok":
+            rl = r["roofline"]
+            extra = (f"compile={r['compile_s']}s "
+                     f"compute={rl['compute_s']:.2e}s "
+                     f"memory={rl['memory_s']:.2e}s "
+                     f"coll={rl['collective_s']:.2e}s "
+                     f"bound={rl['bottleneck']}")
+        elif status == "error":
+            extra = r["error"][:160]
+        print(f"[{status:7s}] {arch:22s} {shape_name:12s} "
+              f"{r['mesh']:7s} {extra}", flush=True)
+        if status == "ok":
+            mem = r["per_device"]
+            print(f"          args={mem['argument_bytes']/1e9:.2f}GB "
+                  f"temp={mem['temp_bytes']/1e9:.2f}GB "
+                  f"flops={mem['flops']:.3e} "
+                  f"coll={mem['collective_bytes']/1e9:.3f}GB", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"] == "error"]
+    if bad:
+        raise SystemExit(f"{len(bad)} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run sweep worker: runs a subset of (arch x shape x mesh) combos and
+writes one JSON per combo to --outdir.  Split across processes by
+--worker/--num-workers."""
+
+import argparse
+import json
+
+from repro.configs import ARCH_NAMES, SHAPES
+from repro.launch.dryrun import run_one
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", required=True)
+    ap.add_argument("--worker", type=int, default=0)
+    ap.add_argument("--num-workers", type=int, default=1)
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    combos = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            for mp in (False, True):
+                combos.append((arch, shape, mp))
+    for i, (arch, shape, mp) in enumerate(combos):
+        if i % args.num_workers != args.worker:
+            continue
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.outdir, tag + ".json")
+        if os.path.exists(path):
+            print(f"skip cached {tag}", flush=True)
+            continue
+        r = run_one(arch, shape, multi_pod=mp)
+        with open(path, "w") as f:
+            json.dump(r, f, indent=1)
+        rl = r.get("roofline", {})
+        print(f"[{r['status']:7s}] {tag} "
+              f"{rl.get('bottleneck', r.get('error', '')[:80])}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

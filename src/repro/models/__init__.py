@@ -1,0 +1,23 @@
+"""Model substrate: six architecture families behind one API."""
+
+from repro.models.config import ModelConfig
+from repro.models.registry import (
+    decode_step,
+    family_module,
+    forward,
+    init_cache,
+    init_params,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "decode_step",
+    "family_module",
+    "forward",
+    "init_cache",
+    "init_params",
+    "param_count",
+    "prefill",
+]

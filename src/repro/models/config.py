@@ -1,0 +1,137 @@
+"""Model configuration dataclass shared by all architecture families."""
+
+from __future__ import annotations
+
+import dataclasses
+import jax.numpy as jnp
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config describes any of the six supported families.
+
+    Family-specific fields are zero/None when unused.  All sizes are the
+    *published* sizes; ``padded_vocab`` rounds the embedding/logit dim up
+    to a multiple of 256 for TPU lane alignment and mesh divisibility
+    (e.g. whisper's 51865), with losses/samplers masking the pad region.
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    vocab_size: int
+    num_kv_heads: int = 0
+    head_dim: int = 0
+
+    # Attention flavour.
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0          # 0 = full attention (mixtral: 4096)
+    max_seq_len: int = 1 << 20
+
+    # MoE.
+    num_experts: int = 0
+    experts_per_token: int = 0
+
+    # SSM (mamba2 / SSD).
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # Hybrid (recurrentgemma): block pattern unit = (pattern_rec x RG-LRU,
+    # 1 x local attention); local window size.
+    pattern_rec: int = 0             # recurrent blocks per unit (rg: 2)
+    local_window: int = 0            # rg: 2048
+    lru_width: int = 0               # rg: d_model-ish recurrent width
+
+    # Enc-dec (whisper): encoder depth + max decoder length.
+    encoder_layers: int = 0
+    max_decoder_len: int = 448
+
+    # VLM (llama-3.2-vision): one cross-attn layer every `cross_attn_period`
+    # self-attn layers; number of stubbed image patch embeddings.
+    cross_attn_period: int = 0       # vision-11b: 5 (8 cross layers in 40)
+    num_image_tokens: int = 0
+
+    # Numerics.
+    dtype: str = "bfloat16"          # activations / params for dry-run
+    norm_eps: float = 1e-5
+
+    # --- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def kv_heads(self) -> int:
+        return self.num_kv_heads or self.num_heads
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.family != "ssm" and self.num_heads <= 0:
+            raise ValueError(f"{self.name}: num_heads required")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant of the same family: tiny but structurally alike."""
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=min(self.d_model, 256),
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            max_seq_len=4096,
+            dtype="float32",
+        )
+        if self.num_heads:
+            heads = min(self.num_heads, 4)
+            kv = max(1, min(self.kv_heads, heads))
+            while heads % kv:
+                kv -= 1
+            kw.update(num_heads=heads, num_kv_heads=kv, head_dim=64)
+        if self.num_experts:
+            kw.update(num_experts=min(self.num_experts, 4),
+                      experts_per_token=min(self.experts_per_token, 2))
+        if self.family == "ssm":
+            kw.update(ssm_state=min(self.ssm_state, 16), ssm_head_dim=32,
+                      ssm_chunk=32)
+        if self.family == "hybrid":
+            kw.update(num_layers=3, local_window=64,
+                      lru_width=min(self.lru_width or self.d_model, 256))
+        if self.family == "encdec":
+            kw.update(encoder_layers=2, max_decoder_len=64)
+        if self.family == "vlm":
+            kw.update(num_layers=5, cross_attn_period=self.cross_attn_period,
+                      num_image_tokens=16)
+        if self.sliding_window:
+            kw.update(sliding_window=64)
+        return self.replace(**kw)

@@ -1,0 +1,266 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention (chunked online
+softmax for long prefill), SwiGLU MLP.  Pure JAX, param pytrees are dicts.
+
+Attention memory note: a naive (S x S) score matrix at 32k/500k sequence
+lengths is the thing that blows the roofline memory term, so
+``chunked_attention`` streams KV blocks with an online-softmax carry —
+the jnp analogue of the flash-attention Pallas kernel in
+``repro/kernels/flash_attention.py`` (which is the TPU-target version of
+the same loop).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_params(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D) with D even; positions: (..., S) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Hkv, G, S, D), k: (B, Hkv, T, D) -> (B, Hkv, G, S, T)."""
+    return jnp.einsum("bhgsd,bhtd->bhgst", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_values(w: jax.Array, v: jax.Array) -> jax.Array:
+    return jnp.einsum("bhgst,bhtd->bhgsd", w.astype(v.dtype), v)
+
+
+def attention(
+    q: jax.Array,                # (B, H, S, D)
+    k: jax.Array,                # (B, Hkv, T, D)
+    v: jax.Array,                # (B, Hkv, T, D)
+    *,
+    causal: bool = True,
+    q_offset=0,                  # position of q[0] within the KV timeline
+    window: int = 0,             # sliding window (0 = unbounded)
+    kv_len: Optional[jax.Array] = None,  # valid KV prefix length (decode)
+) -> jax.Array:
+    """GQA attention without materializing repeated KV heads.
+
+    Small/medium sequence path; for long prefill use ``chunked_attention``.
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    q = q.reshape(b, hkv, g, s, d)
+    scores = _gqa_scores(q, k) / jnp.sqrt(d).astype(jnp.float32)
+    t = k.shape[2]
+    q_pos = q_offset + jnp.arange(s)
+    k_pos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    # Rows that are fully masked produce NaN; zero them (can't happen for
+    # causal q_offset>=0 but can for padded decode batches).
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = _gqa_values(w, v)
+    return out.reshape(b, h, s, d)
+
+
+def chunked_attention(
+    q: jax.Array,                # (B, H, S, D)
+    k: jax.Array,                # (B, Hkv, T, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    window: int = 0,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention streaming KV in blocks (flash-style).
+
+    Memory is O(S * kv_block) instead of O(S * T).  Used for prefill at
+    32k+; exactly matches ``attention`` numerically (up to fp assoc.).
+    """
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    if t % kv_block:
+        pad = kv_block - t % kv_block
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        t_pad = t + pad
+    else:
+        t_pad = t
+    nblk = t_pad // kv_block
+    qr = q.reshape(b, hkv, g, s, d)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(s)
+
+    k_blocks = k.reshape(b, hkv, nblk, kv_block, d).transpose(2, 0, 1, 3, 4)
+    v_blocks = v.reshape(b, hkv, nblk, kv_block, d).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        blk_idx, kb, vb = xs
+        scores = jnp.einsum("bhgsd,bhtd->bhgst", qr, kb,
+                            preferred_element_type=jnp.float32) * scale
+        k_pos = blk_idx * kv_block + jnp.arange(kv_block)
+        mask = k_pos[None, :] < t  # drop pad
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        else:
+            mask = jnp.broadcast_to(mask, (s, kv_block))
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        m_blk = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        # Guard fully-masked-so-far rows (m_new could still be -inf).
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(scores - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(scores), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bhtd->bhgsd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(nblk), k_blocks, v_blocks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_params(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return (gate * (x @ params["w_up"])) @ params["w_down"]
+
+
+def gelu_mlp_params(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(k2, d_ff, d_model, dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["w_in"] + params["b_in"])
+    return h @ params["w_out"] + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Attention block params (projections shared by all attention variants)
+# ---------------------------------------------------------------------------
+
+
+def attn_params(key, d_model: int, num_heads: int, kv_heads: int,
+                head_dim: int, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(k2, d_model, kv_heads * head_dim, dtype),
+        "wv": dense_init(k3, d_model, kv_heads * head_dim, dtype),
+        "wo": dense_init(k4, num_heads * head_dim, d_model, dtype),
+    }
+
+
+def project_qkv(params: dict, x: jax.Array, num_heads: int, kv_heads: int,
+                head_dim: int):
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"]).reshape(b, s, kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"]).reshape(b, s, kv_heads, head_dim).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def project_out(params: dict, attn_out: jax.Array) -> jax.Array:
+    b, h, s, d = attn_out.shape
+    return attn_out.transpose(0, 2, 1, 3).reshape(b, s, h * d) @ params["wo"]

@@ -1,0 +1,318 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).  Attention-free.
+
+Training/prefill uses the *chunked* SSD algorithm: intra-chunk quadratic
+(attention-like, decay-masked) + inter-chunk diagonal state recurrence, so
+materialized states are O(seq/chunk), not O(seq).  Decode is the O(1)
+per-token recurrence — which is why this arch runs the long_500k shape.
+
+Per-block structure (simplified n_groups=1 Mamba-2):
+  in_proj: d -> [z (d_in), x (d_in), B (d_state), C (d_state), dt (H)]
+  depthwise causal conv(width 4) over [x, B, C]
+  SSD: h_t = exp(A dt_t) h_{t-1} + dt_t * B_t (x) x_t ;  y_t = C_t . h_t + D x_t
+  out = out_proj( rmsnorm(y * silu(z)) )
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.stack import scan_blocks, stack_init
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_d_inner
+    h = cfg.ssm_num_heads
+    ds = cfg.ssm_state
+    conv_dim = d_in + 2 * ds
+    return d_in, h, ds, conv_dim
+
+
+def _block_init(key, cfg: ModelConfig) -> dict:
+    d_in, h, ds, conv_dim = _dims(cfg)
+    dt = cfg.activation_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    proj_out = 2 * d_in + 2 * ds + h
+    return {
+        "norm": L.rmsnorm_params(cfg.d_model, dt),
+        "in_proj": L.dense_init(k1, cfg.d_model, proj_out, dt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "y_norm": L.rmsnorm_params(d_in, dt),
+        "out_proj": L.dense_init(k3, d_in, cfg.d_model, dt),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    dt = cfg.activation_dtype
+    return {
+        "embed": L.embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dt),
+        "layers": stack_init(k_layers, cfg.num_layers,
+                             lambda k: _block_init(k, cfg)),
+        "final_norm": L.rmsnorm_params(cfg.d_model, dt),
+        "lm_head": L.dense_init(k_head, cfg.d_model, cfg.padded_vocab, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(w: jax.Array, b: jax.Array, x: jax.Array,
+                state: jax.Array | None = None):
+    """x: (B, S, C); w: (W, C) depthwise.  Returns (y, new_state) where
+    state is the last (W-1) inputs for streaming decode."""
+    width = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(width):
+        y = y + x_pad[:, i:i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32)).astype(x.dtype)
+    new_state = x_pad[:, x_pad.shape[1] - (width - 1):]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, a, b_in, c_in, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    Args:
+      x:    (B, S, H, P)  per-head inputs (P = head_dim)
+      dt:   (B, S, H)     softplus'd step sizes (float32)
+      a:    (H,)          negative decay rates (float32, a < 0)
+      b_in: (B, S, N)     input projections (shared across heads, n_groups=1)
+      c_in: (B, S, N)     output projections
+      chunk: chunk length Q (static; S % Q == 0 after padding)
+      h0:   optional initial state (B, H, P, N)
+
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    q = chunk
+    if s % q:
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        s_pad = s + pad
+    else:
+        s_pad = s
+    nc = s_pad // q
+
+    xs = x.reshape(bsz, nc, q, h, p)
+    dts = dt.reshape(bsz, nc, q, h)
+    bs = b_in.reshape(bsz, nc, q, n)
+    cs = c_in.reshape(bsz, nc, q, n)
+
+    # Per-step log decay and within-chunk cumulative sums.
+    la = dts * a[None, None, None, :]                    # (B,NC,Q,H) log decay
+    cum = jnp.cumsum(la, axis=2)                         # inclusive cumsum
+    total = cum[:, :, -1]                                # (B,NC,H)
+
+    # ---- intra-chunk (quadratic, decay-masked) ----
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0   (note: includes la_i)
+    li = cum[:, :, :, None, :]                           # (B,NC,Q,1,H)
+    lj = cum[:, :, None, :, :]                           # (B,NC,1,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # Double-where: masked (i<j) entries have li-lj > 0 which would overflow
+    # exp and poison gradients with inf*0=NaN cotangents.
+    diff = jnp.where(mask, li - lj, 0.0)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cs.astype(jnp.float32),
+                    bs.astype(jnp.float32))              # (B,NC,Q,Q)
+    w = cb[..., None] * decay                            # (B,NC,Q,Q,H)
+    xdt = xs.astype(jnp.float32) * dts[..., None]        # (B,NC,Q,H,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xdt)
+
+    # ---- chunk summary states ----
+    # state_c = Σ_j exp(total - cum_j) * B_j ⊗ (dt_j x_j)   (B,NC,H,P,N)
+    rem = jnp.exp(total[:, :, None, :] - cum)            # (B,NC,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        rem, bs.astype(jnp.float32), xdt)
+
+    # ---- inter-chunk recurrence over chunk boundaries ----
+    def step(h_prev, xs_c):
+        tot_c, st_c = xs_c                               # (B,H), (B,H,P,N)
+        h_in = h_prev                                    # state entering chunk
+        h_out = h_prev * jnp.exp(tot_c)[:, :, None, None] + st_c
+        return h_out, h_in
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    tot_t = total.transpose(1, 0, 2)                     # (NC,B,H)
+    st_t = states.transpose(1, 0, 2, 3, 4)               # (NC,B,H,P,N)
+    h_final, h_ins = jax.lax.scan(step, h0.astype(jnp.float32), (tot_t, st_t))
+    h_ins = h_ins.transpose(1, 0, 2, 3, 4)               # (B,NC,H,P,N)
+
+    # ---- inter-chunk output: y_t += exp(cum_t) * C_t . h_in ----
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         cs.astype(jnp.float32), h_ins, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(x, dt, a, b_in, c_in, h_prev):
+    """Single-token recurrence.  x: (B,H,P); dt: (B,H); b/c: (B,N);
+    h_prev: (B,H,P,N) -> (y (B,H,P), h (B,H,P,N))."""
+    decay = jnp.exp(dt * a[None, :])                         # (B,H)
+    dx = (x * dt[..., None]).astype(jnp.float32)             # (B,H,P)
+    h = (h_prev * decay[:, :, None, None]
+         + jnp.einsum("bhp,bn->bhpn", dx, b_in.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", h, c_in.astype(jnp.float32))
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in, h, ds, _ = _dims(cfg)
+    z, xx, b_in, c_in, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + ds, 2 * d_in + 2 * ds], axis=-1)
+    return z, xx, b_in, c_in, dt
+
+
+def _block_apply(params_l, x, cfg: ModelConfig, cache_l=None):
+    """Full-sequence path (train/prefill).  Returns (x, new_cache_l)."""
+    d_in, h, ds, conv_dim = _dims(cfg)
+    p = d_in // h
+    res = x
+    xn = L.rmsnorm(params_l["norm"], x, cfg.norm_eps)
+    proj = xn @ params_l["in_proj"]
+    z, xx, b_in, c_in, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xx, b_in, c_in], axis=-1)
+    conv_out, conv_state = causal_conv(params_l["conv_w"], params_l["conv_b"],
+                                       conv_in)
+    xx, b_in, c_in = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+
+    bsz, s, _ = x.shape
+    xh = xx.reshape(bsz, s, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params_l["dt_bias"][None, None, :])
+    a = -jnp.exp(params_l["a_log"])
+    y, h_final = ssd_chunked(xh, dt, a, b_in, c_in, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * params_l["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    y = L.rmsnorm(params_l["y_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = res + y @ params_l["out_proj"]
+    new_cache = None
+    if cache_l is not None:
+        new_cache = {"conv": conv_state.astype(cache_l["conv"].dtype),
+                     "ssm": h_final.astype(cache_l["ssm"].dtype)}
+    return out, new_cache
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *,
+            remat: bool = True, return_hidden: bool = False) -> jax.Array:
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    fn = functools.partial(_fn_train, cfg=cfg)
+    x, _ = scan_blocks(params["layers"], x, fn, remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return x @ params["lm_head"]
+
+
+def _fn_train(params_l, x, _cache, cfg: ModelConfig):
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    out, _ = _block_apply(params_l, x, cfg)
+    return out, None
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    d_in, h, ds, conv_dim = _dims(cfg)
+    p = d_in // h
+    dt = cfg.activation_dtype
+    return {
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv_width - 1,
+                           conv_dim), dt),
+        "ssm": jnp.zeros((cfg.num_layers, batch, h, p, ds), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _fn_prefill(params_l, x, cache_l, cfg: ModelConfig):
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    return _block_apply(params_l, x, cfg, cache_l=cache_l)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = params["embed"][tokens]
+    fn = functools.partial(_fn_prefill, cfg=cfg)
+    layer_cache = {"conv": cache["conv"], "ssm": cache["ssm"]}
+    x, new_cache = scan_blocks(params["layers"], x, fn, cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"conv": new_cache["conv"], "ssm": new_cache["ssm"],
+                    "pos": jnp.asarray(s, jnp.int32)}
+
+
+def _fn_decode(params_l, carry, cache_l, cfg: ModelConfig):
+    x = carry  # (B, 1, D)
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    d_in, h, ds, conv_dim = _dims(cfg)
+    p = d_in // h
+    res = x
+    xn = L.rmsnorm(params_l["norm"], x, cfg.norm_eps)
+    proj = xn @ params_l["in_proj"]
+    z, xx, b_in, c_in, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xx, b_in, c_in], axis=-1)
+    conv_out, conv_state = causal_conv(params_l["conv_w"], params_l["conv_b"],
+                                       conv_in, state=cache_l["conv"])
+    xx, b_in, c_in = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+    bsz = x.shape[0]
+    xh = xx[:, 0].reshape(bsz, h, p)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params_l["dt_bias"][None, :])
+    a = -jnp.exp(params_l["a_log"])
+    y, h_new = ssd_step(xh, dt, a, b_in[:, 0], c_in[:, 0], cache_l["ssm"])
+    y = y + xh * params_l["d_skip"].astype(xh.dtype)[None, :, None]
+    y = y.reshape(bsz, 1, d_in)
+    y = L.rmsnorm(params_l["y_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = res + y @ params_l["out_proj"]
+    return out, {"conv": conv_state.astype(cache_l["conv"].dtype),
+                 "ssm": h_new}
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict):
+    x = params["embed"][tokens]
+    fn = functools.partial(_fn_decode, cfg=cfg)
+    layer_cache = {"conv": cache["conv"], "ssm": cache["ssm"]}
+    x, new_cache = scan_blocks(params["layers"], x, fn, cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"conv": new_cache["conv"], "ssm": new_cache["ssm"],
+                    "pos": cache["pos"] + 1}

@@ -1,0 +1,50 @@
+"""Family registry: uniform model API dispatch.
+
+Every family module exports:
+  init_params(key, cfg), forward(params, cfg, batch, *, remat=...),
+  init_cache(cfg, batch, max_len), prefill(params, cfg, batch, cache),
+  decode_step(params, cfg, tokens, cache)
+"""
+
+from __future__ import annotations
+
+from types import ModuleType
+
+from repro.models.config import ModelConfig
+
+
+def family_module(cfg: ModelConfig) -> ModuleType:
+    from repro.models import encdec, mamba2, moe, rglru, transformer, vlm
+    return {
+        "dense": transformer,
+        "moe": moe,
+        "ssm": mamba2,
+        "hybrid": rglru,
+        "encdec": encdec,
+        "vlm": vlm,
+    }[cfg.family]
+
+
+def init_params(key, cfg: ModelConfig):
+    return family_module(cfg).init_params(key, cfg)
+
+
+def forward(params, cfg: ModelConfig, batch, **kw):
+    return family_module(cfg).forward(params, cfg, batch, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return family_module(cfg).init_cache(cfg, batch, max_len)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    return family_module(cfg).prefill(params, cfg, batch, cache)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    return family_module(cfg).decode_step(params, cfg, tokens, cache)
+
+
+def param_count(params) -> int:
+    import jax
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

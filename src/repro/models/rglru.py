@@ -1,0 +1,354 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): residual blocks
+cycle (recurrent, recurrent, local-attention); recurrent blocks use the
+RG-LRU diagonal gated linear recurrence + short temporal conv; local
+attention is MQA with a bounded window — so decode state is O(window),
+qualifying this arch for long_500k.
+
+Pattern handling: 26 layers = 8 scanned units of (rec, rec, attn) + 2
+trailing recurrent blocks (see DESIGN.md).  Each temporal block is
+followed by its own MLP sub-block (Griffin structure).
+
+RG-LRU (per channel, diagonal):
+  r_t = sigmoid(W_a x_t); i_t = sigmoid(W_x x_t)
+  log a_t = -c * softplus(Λ) * r_t          (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t ⊙ x_t)
+Implemented with an associative scan for full sequences (diagonal state ==
+input width, so materialization is O(S * width)) and a one-step update for
+decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.stack import scan_blocks, stack_init
+
+LRU_C = 8.0
+CONV_WIDTH = 4
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def _rec_block_init(key, cfg: ModelConfig) -> dict:
+    dt = cfg.activation_dtype
+    w = _lru_width(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "norm": L.rmsnorm_params(cfg.d_model, dt),
+        "w_x": L.dense_init(k1, cfg.d_model, w, dt),       # recurrence branch
+        "w_gate": L.dense_init(k2, cfg.d_model, w, dt),    # GeLU gate branch
+        "conv_w": (jax.random.normal(k3, (CONV_WIDTH, w), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "lru_wa": L.dense_init(k4, w, w, dt),
+        "lru_wx": L.dense_init(k5, w, w, dt),
+        "lru_lambda": jnp.full((w,), 1.0, jnp.float32),
+        "w_out": L.dense_init(k6, w, cfg.d_model, dt),
+        "mlp_norm": L.rmsnorm_params(cfg.d_model, dt),
+        "mlp": L.swiglu_params(jax.random.fold_in(key, 7), cfg.d_model,
+                               cfg.d_ff, dt),
+    }
+
+
+def _attn_block_init(key, cfg: ModelConfig) -> dict:
+    dt = cfg.activation_dtype
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    return {
+        "norm": L.rmsnorm_params(cfg.d_model, dt),
+        "attn": L.attn_params(k1, cfg.d_model, cfg.num_heads, cfg.kv_heads,
+                              hd, dt),
+        "mlp_norm": L.rmsnorm_params(cfg.d_model, dt),
+        "mlp": L.swiglu_params(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _unit_init(key, cfg: ModelConfig) -> dict:
+    """One scan unit: `pattern_rec` recurrent blocks + 1 attention block."""
+    keys = jax.random.split(key, cfg.pattern_rec + 1)
+    recs = jax.vmap(lambda k: _rec_block_init(k, cfg))(keys[:-1])
+    return {"rec": recs, "attn": _attn_block_init(keys[-1], cfg)}
+
+
+def layout(cfg: ModelConfig):
+    """Return (n_units, n_extra_rec) covering cfg.num_layers blocks."""
+    unit = cfg.pattern_rec + 1
+    n_units = cfg.num_layers // unit
+    extra = cfg.num_layers - n_units * unit  # trailing recurrent blocks
+    return n_units, extra
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    n_units, extra = layout(cfg)
+    k_embed, k_units, k_extra, k_head = jax.random.split(key, 4)
+    dt = cfg.activation_dtype
+    params = {
+        "embed": L.embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dt),
+        "units": stack_init(k_units, n_units, lambda k: _unit_init(k, cfg)),
+        "final_norm": L.rmsnorm_params(cfg.d_model, dt),
+        "lm_head": L.dense_init(k_head, cfg.d_model, cfg.padded_vocab, dt),
+    }
+    if extra:
+        params["extra_rec"] = stack_init(
+            k_extra, extra, lambda k: _rec_block_init(k, cfg))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _lru_gates(p, x):
+    """x: (..., W) branch input -> (log_a (f32), gated input (f32))."""
+    r = jax.nn.sigmoid((x @ p["lru_wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["lru_wx"]).astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lru_lambda"]) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    u = beta * i * x.astype(jnp.float32)
+    return log_a, u
+
+
+def rg_lru_scan(p, x, h0=None):
+    """Full-sequence RG-LRU.  x: (B, S, W) -> (y (B,S,W), h_final (B,W))."""
+    log_a, u = _lru_gates(p, x)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 + a2, u1 * jnp.exp(a2) + u2
+
+    a_acc, h = jax.lax.associative_scan(combine, (log_a, u), axis=1)
+    if h0 is not None:
+        h = h + jnp.exp(a_acc) * h0[:, None, :].astype(jnp.float32)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(p, x, h_prev):
+    """x: (B, 1, W); h_prev: (B, W) f32."""
+    log_a, u = _lru_gates(p, x)
+    h = jnp.exp(log_a[:, 0]) * h_prev + u[:, 0]
+    return h.astype(x.dtype)[:, None, :], h
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _rec_apply(p, cfg, x, cache=None, decode=False):
+    """Recurrent block + MLP.  cache: {"conv": (B,CW-1,W), "h": (B,W)}."""
+    res = x
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    branch = xn @ p["w_x"]
+    gate = jax.nn.gelu(xn @ p["w_gate"])
+    from repro.models.mamba2 import causal_conv
+    conv_state = cache["conv"] if cache is not None else None
+    branch, new_conv = causal_conv(p["conv_w"], p["conv_b"], branch,
+                                   state=conv_state if decode else None)
+    if decode:
+        y, h_new = rg_lru_step(p, branch, cache["h"])
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h_new = rg_lru_scan(p, branch, h0=None)
+    x = res + (y * gate) @ p["w_out"]
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "h": h_new.astype(jnp.float32)}
+    return x, new_cache
+
+
+def _attn_apply(p, cfg, x, positions, cache=None, pos=None):
+    """Local-attention block + MLP.  Full-seq when cache-less or prefill;
+    single-step ring-buffer decode when ``pos`` is given."""
+    hd = cfg.resolved_head_dim
+    res = x
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    q, k, v = L.project_qkv(p["attn"], xn, cfg.num_heads, cfg.kv_heads, hd)
+    if pos is None:  # full sequence
+        q = L.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = L.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+        s = x.shape[1]
+        if s > 2048:
+            out = L.chunked_attention(q, k, v, causal=True,
+                                      window=cfg.local_window)
+        else:
+            out = L.attention(q, k, v, causal=True, window=cfg.local_window)
+        new_cache = None
+        if cache is not None:
+            t_cache = cache["k"].shape[2]
+            if s >= t_cache:
+                tail = jax.lax.dynamic_slice_in_dim(k, s - t_cache, t_cache, 2)
+                tail_v = jax.lax.dynamic_slice_in_dim(v, s - t_cache, t_cache, 2)
+                shift = s % t_cache
+                idx = (jnp.arange(t_cache) - shift) % t_cache
+                new_k = tail[:, :, idx] if shift else tail
+                new_v = tail_v[:, :, idx] if shift else tail_v
+            else:
+                new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 2)
+                new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 2)
+            new_cache = {"k": new_k, "v": new_v}
+    else:  # decode
+        posb = jnp.broadcast_to(pos[None, None], (x.shape[0], 1, 1))
+        q = L.apply_rope(q, posb, cfg.rope_theta)
+        k = L.apply_rope(k, posb, cfg.rope_theta)
+        t_cache = cache["k"].shape[2]
+        slot = pos % t_cache
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 2)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 2)
+        kv_len = jnp.minimum(pos + 1, t_cache)
+        out = L.attention(q, new_k, new_v, causal=False, kv_len=kv_len)
+        new_cache = {"k": new_k, "v": new_v}
+    x = res + L.project_out(p["attn"], out)
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n_units, extra = layout(cfg)
+    w = _lru_width(cfg)
+    t = min(max_len, cfg.local_window)
+    hd = cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+
+    def rec_cache(n):
+        return {"conv": jnp.zeros((n, cfg.pattern_rec, batch,
+                                   CONV_WIDTH - 1, w), dt)
+                if n else None,
+                "h": jnp.zeros((n, cfg.pattern_rec, batch, w), jnp.float32)
+                if n else None}
+
+    cache = {
+        "units": {
+            "rec": {"conv": jnp.zeros((n_units, cfg.pattern_rec, batch,
+                                       CONV_WIDTH - 1, w), dt),
+                    "h": jnp.zeros((n_units, cfg.pattern_rec, batch, w),
+                                   jnp.float32)},
+            "attn": {"k": jnp.zeros((n_units, batch, cfg.kv_heads, t, hd), dt),
+                     "v": jnp.zeros((n_units, batch, cfg.kv_heads, t, hd), dt)},
+        },
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if extra:
+        cache["extra_rec"] = {
+            "conv": jnp.zeros((extra, batch, CONV_WIDTH - 1, w), dt),
+            "h": jnp.zeros((extra, batch, w), jnp.float32),
+        }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _unit_apply(params_u, carry, cache_u, cfg: ModelConfig, decode=False):
+    x, positions, pos = carry
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    new_rec_conv, new_rec_h = [], []
+    for i in range(cfg.pattern_rec):
+        p_i = jax.tree.map(lambda a: a[i], params_u["rec"])
+        c_i = None
+        if cache_u is not None:
+            c_i = {"conv": cache_u["rec"]["conv"][i],
+                   "h": cache_u["rec"]["h"][i]}
+        x, nc = _rec_apply(p_i, cfg, x, cache=c_i, decode=decode)
+        if nc is not None:
+            new_rec_conv.append(nc["conv"])
+            new_rec_h.append(nc["h"])
+    attn_cache = cache_u["attn"] if cache_u is not None else None
+    x, new_attn = _attn_apply(params_u["attn"], cfg, x, positions,
+                              cache=attn_cache, pos=pos if decode else None)
+    new_cache = None
+    if cache_u is not None:
+        new_cache = {"rec": {"conv": jnp.stack(new_rec_conv),
+                             "h": jnp.stack(new_rec_h)},
+                     "attn": new_attn}
+    return (x, positions, pos), new_cache
+
+
+def _run(params, cfg: ModelConfig, x, positions, cache=None, pos=None,
+         remat=False):
+    decode = pos is not None
+    fn = functools.partial(_unit_apply, cfg=cfg, decode=decode)
+    unit_cache = cache["units"] if cache is not None else None
+    (x, _, _), new_units = scan_blocks(params["units"], (x, positions, pos),
+                                       fn, cache=unit_cache, remat=remat)
+    new_extra = None
+    if "extra_rec" in params:
+        n_extra = jax.tree_util.tree_leaves(params["extra_rec"])[0].shape[0]
+        convs, hs = [], []
+        for i in range(n_extra):
+            p_i = jax.tree.map(lambda a: a[i], params["extra_rec"])
+            c_i = None
+            if cache is not None:
+                c_i = {"conv": cache["extra_rec"]["conv"][i],
+                       "h": cache["extra_rec"]["h"][i]}
+            x, nc = _rec_apply(p_i, cfg, x, cache=c_i, decode=decode)
+            if nc is not None:
+                convs.append(nc["conv"])
+                hs.append(nc["h"])
+        if convs:
+            new_extra = {"conv": jnp.stack(convs), "h": jnp.stack(hs)}
+    return x, new_units, new_extra
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *,
+            remat: bool = True, return_hidden: bool = False) -> jax.Array:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _, _ = _run(params, cfg, x, positions, remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return x @ params["lm_head"]
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, new_units, new_extra = _run(params, cfg, x, positions, cache=cache)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    new_cache = {"units": new_units, "pos": jnp.asarray(s, jnp.int32)}
+    if new_extra is not None:
+        new_cache["extra_rec"] = new_extra
+    return logits, new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict):
+    x = params["embed"][tokens]
+    pos = cache["pos"]
+    positions = None
+    x, new_units, new_extra = _run(params, cfg, x, positions, cache=cache,
+                                   pos=pos)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    new_cache = {"units": new_units, "pos": pos + 1}
+    if new_extra is not None:
+        new_cache["extra_rec"] = new_extra
+    return logits, new_cache

@@ -1,0 +1,52 @@
+"""Layer-stacking helpers: params carry a leading layer axis and blocks are
+applied with ``lax.scan`` so the HLO stays O(1) in depth (essential when
+lowering 126-layer models for the 512-chip dry-run)."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def stack_init(key: jax.Array, n: int, init_fn: Callable[[jax.Array], dict]) -> dict:
+    """vmap an init function over n per-layer keys -> stacked param pytree."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def scan_blocks(
+    stacked_params,
+    x: jax.Array,
+    fn: Callable,
+    *,
+    cache=None,
+    remat: bool = False,
+):
+    """Apply ``fn(layer_params, x, layer_cache) -> (x, new_layer_cache)``
+    over the stacked layer axis.
+
+    Returns (x, new_cache) where new_cache mirrors ``cache``'s stacking.
+    When ``cache`` is None, fn is called with None and must return
+    (x, None).
+    """
+    body_fn = fn
+    if remat:
+        body_fn = jax.checkpoint(fn, prevent_cse=False)
+
+    def step(carry, xs):
+        params_l, cache_l = xs
+        y, new_cache_l = body_fn(params_l, carry, cache_l)
+        return y, new_cache_l
+
+    if cache is None:
+        n = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+        cache_xs = jnp.zeros((n, 0))  # dummy, same leading dim
+        out, _ = jax.lax.scan(
+            lambda c, xs: (body_fn(xs[0], c, None)[0], None),
+            x, (stacked_params, cache_xs))
+        return out, None
+
+    out, new_cache = jax.lax.scan(step, x, (stacked_params, cache))
+    return out, new_cache

@@ -1,0 +1,246 @@
+"""Dense llama-family decoder-only transformer (GQA + RoPE + SwiGLU +
+RMSNorm).  Covers granite-8b/34b, llama3-405b, smollm-360m, and is the
+backbone reused by the MoE and VLM families.
+
+Uniform model API (same across all families; see registry.py):
+
+  init_params(key, cfg)                         -> params
+  forward(params, cfg, batch)                   -> logits (B, S, Vpad)
+  init_cache(cfg, batch, max_len)               -> cache
+  prefill(params, cfg, batch, cache)            -> (last_logits (B,Vpad), cache)
+  decode_step(params, cfg, tokens (B,1), cache) -> (logits (B,Vpad), cache)
+
+KV caches hold RoPE'd keys; sliding-window configs use a ring buffer of
+size ``window`` so long_500k decode state stays O(window).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.stack import scan_blocks, stack_init
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    return {
+        "attn_norm": L.rmsnorm_params(cfg.d_model, cfg.activation_dtype),
+        "attn": L.attn_params(k1, cfg.d_model, cfg.num_heads, cfg.kv_heads,
+                              hd, cfg.activation_dtype),
+        "mlp_norm": L.rmsnorm_params(cfg.d_model, cfg.activation_dtype),
+        "mlp": L.swiglu_params(k2, cfg.d_model, cfg.d_ff, cfg.activation_dtype),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    dt = cfg.activation_dtype
+    return {
+        "embed": L.embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dt),
+        "layers": stack_init(k_layers, cfg.num_layers,
+                             lambda k: _block_init(k, cfg)),
+        "final_norm": L.rmsnorm_params(cfg.d_model, dt),
+        "lm_head": L.dense_init(k_head, cfg.d_model, cfg.padded_vocab, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _attn_full(p, cfg: ModelConfig, x, positions, chunked: bool):
+    """Full-sequence (train / prefill) self-attention."""
+    hd = cfg.resolved_head_dim
+    q, k, v = L.project_qkv(p, x, cfg.num_heads, cfg.kv_heads, hd)
+    q = L.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = L.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    if chunked:
+        out = L.chunked_attention(q, k, v, causal=True,
+                                  window=cfg.sliding_window)
+    else:
+        out = L.attention(q, k, v, causal=True, window=cfg.sliding_window)
+    return L.project_out(p, out), (k, v)
+
+
+def _block_train(params_l, x_and_pos, _cache, cfg: ModelConfig, chunked):
+    x, positions = x_and_pos
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    h, _ = _attn_full(params_l["attn"], cfg,
+                      L.rmsnorm(params_l["attn_norm"], x, cfg.norm_eps),
+                      positions, chunked)
+    x = x + h
+    x = x + L.swiglu(params_l["mlp"],
+                     L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
+    x = constrain(x, "layer_carry")
+    return (x, positions), None
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *,
+            remat: bool = True, chunked: Optional[bool] = None,
+            return_hidden: bool = False) -> jax.Array:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if chunked is None:
+        chunked = s > 2048
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    fn = functools.partial(_block_train, cfg=cfg, chunked=chunked)
+    (x, _), _ = scan_blocks(params["layers"], (x, positions), fn, remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return x @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache + serving paths
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    t = cache_len(cfg, max_len)
+    hd = cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, cfg.kv_heads, t, hd), dt),
+        "v": jnp.zeros((cfg.num_layers, batch, cfg.kv_heads, t, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _block_prefill(params_l, carry, cache_l, cfg: ModelConfig, chunked):
+    """Prefill: full self-attention AND cache write (ring for SWA)."""
+    x, positions = carry
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    h, (k, v) = _attn_full(params_l["attn"], cfg,
+                           L.rmsnorm(params_l["attn_norm"], x, cfg.norm_eps),
+                           positions, chunked)
+    x = x + h
+    x = x + L.swiglu(params_l["mlp"],
+                     L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
+    t_cache = cache_l["k"].shape[2]
+    s = k.shape[2]
+    if s >= t_cache:
+        # Keep the last t_cache positions (ring semantics: slot = pos % t).
+        tail = jax.lax.dynamic_slice_in_dim(k, s - t_cache, t_cache, axis=2)
+        tail_v = jax.lax.dynamic_slice_in_dim(v, s - t_cache, t_cache, axis=2)
+        shift = s % t_cache
+        idx = (jnp.arange(t_cache) - shift) % t_cache
+        new_k = tail[:, :, idx] if shift else tail
+        new_v = tail_v[:, :, idx] if shift else tail_v
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, 0, axis=2)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, 0, axis=2)
+    return (x, positions), {"k": new_k, "v": new_v}
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    fn = functools.partial(_block_prefill, cfg=cfg, chunked=s > 2048)
+    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    (x, _), new_cache = scan_blocks(params["layers"], (x, positions), fn,
+                                    cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"k": new_cache["k"], "v": new_cache["v"],
+                    "pos": jnp.asarray(s, jnp.int32)}
+
+
+def _block_decode(params_l, carry, cache_l, cfg: ModelConfig):
+    x, pos = carry  # x: (B, 1, D); pos: scalar current position
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    p = params_l["attn"]
+    hd = cfg.resolved_head_dim
+    xin = L.rmsnorm(params_l["attn_norm"], x, cfg.norm_eps)
+    q, k, v = L.project_qkv(p, xin, cfg.num_heads, cfg.kv_heads, hd)
+    posb = jnp.broadcast_to(pos[None, None], (x.shape[0], 1, 1))
+    q = L.apply_rope(q, posb, cfg.rope_theta)
+    k = L.apply_rope(k, posb, cfg.rope_theta)
+    t_cache = cache_l["k"].shape[2]
+    slot = pos % t_cache
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, slot, axis=2)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, slot, axis=2)
+    kv_len = jnp.minimum(pos + 1, t_cache)
+    out = L.attention(q, new_k, new_v, causal=False, kv_len=kv_len)
+    x = x + L.project_out(p, out)
+    x = x + L.swiglu(params_l["mlp"],
+                     L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
+    return (x, pos), {"k": new_k, "v": new_v}
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict):
+    """tokens: (B, 1) -> (logits (B, Vpad), new cache)."""
+    x = params["embed"][tokens]
+    pos = cache["pos"]
+    fn = functools.partial(_block_decode, cfg=cfg)
+    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
+                                    cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"k": new_cache["k"], "v": new_cache["v"], "pos": pos + 1}
+
+
+def _block_verify(params_l, carry, cache_l, cfg: ModelConfig):
+    """Multi-token decode ("verify chunk"): process m draft tokens against
+    the cache in one pass — the serving step for multi-draft speculative
+    decoding (paper Alg. 2).  Non-ring caches only (full attention)."""
+    x, pos = carry  # x: (B, m, D); pos: scalar start position
+    p = params_l["attn"]
+    hd = cfg.resolved_head_dim
+    b, m, _ = x.shape
+    xin = L.rmsnorm(params_l["attn_norm"], x, cfg.norm_eps)
+    q, k, v = L.project_qkv(p, xin, cfg.num_heads, cfg.kv_heads, hd)
+    positions = (pos + jnp.arange(m, dtype=jnp.int32))[None, None, :]
+    positions = jnp.broadcast_to(positions, (b, 1, m))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, pos, axis=2)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, pos, axis=2)
+    kv_len = pos + m
+    out = L.attention(q, new_k, new_v, causal=True, q_offset=pos,
+                      kv_len=kv_len)
+    x = x + L.project_out(p, out)
+    x = x + L.swiglu(params_l["mlp"],
+                     L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
+    return (x, pos), {"k": new_k, "v": new_v}
+
+
+def verify_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict):
+    """tokens: (B, m) — the pending token + m-1 draft tokens.  Returns
+    (logits (B, m, Vpad), new cache) with logits[:, j] = q(. | ...tokens
+    up to j), i.e. the q^(1..m) distributions Algorithm 2 verifies."""
+    assert not cfg.sliding_window, "verify_step: non-ring caches only"
+    x = params["embed"][tokens]
+    pos = cache["pos"]
+    fn = functools.partial(_block_verify, cfg=cfg)
+    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
+                                    cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, {"k": new_cache["k"], "v": new_cache["v"],
+                    "pos": pos + tokens.shape[1]}

@@ -1,0 +1,195 @@
+"""Llama-3.2-Vision-style VLM backbone: a llama-family text decoder with
+gated cross-attention layers interleaved every ``cross_attn_period``
+self-attention layers (11B: 40 layers, 8 cross-attn).
+
+The vision encoder + projector is a STUB per the assignment:
+``batch["images"]`` carries precomputed patch embeddings
+(B, num_image_tokens, d_model).  Cross-attention K/V over the image
+tokens are computed once at prefill and reused at every decode step.
+
+Scan layout: ``num_layers // period`` units of
+(period-1 self-attn blocks, 1 cross-attn block), stacked and scanned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.stack import scan_blocks, stack_init
+
+
+def layout(cfg: ModelConfig):
+    period = cfg.cross_attn_period
+    assert cfg.num_layers % period == 0, "vlm: num_layers % period != 0"
+    return cfg.num_layers // period, period - 1  # (n_units, self per unit)
+
+
+def _cross_block_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.activation_dtype
+    hd = cfg.resolved_head_dim
+    return {
+        "norm": L.rmsnorm_params(cfg.d_model, dt),
+        "attn": L.attn_params(k1, cfg.d_model, cfg.num_heads, cfg.kv_heads,
+                              hd, dt),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+        "mlp_norm": L.rmsnorm_params(cfg.d_model, dt),
+        "mlp": L.swiglu_params(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _unit_init(key, cfg: ModelConfig) -> dict:
+    n_units, n_self = layout(cfg)
+    keys = jax.random.split(key, n_self + 1)
+    selfs = jax.vmap(lambda k: T._block_init(k, cfg))(keys[:-1])
+    return {"self": selfs, "cross": _cross_block_init(keys[-1], cfg)}
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    n_units, _ = layout(cfg)
+    k_embed, k_units, k_head = jax.random.split(key, 3)
+    dt = cfg.activation_dtype
+    return {
+        "embed": L.embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dt),
+        "units": stack_init(k_units, n_units, lambda k: _unit_init(k, cfg)),
+        "final_norm": L.rmsnorm_params(cfg.d_model, dt),
+        "lm_head": L.dense_init(k_head, cfg.d_model, cfg.padded_vocab, dt),
+    }
+
+
+def _cross_apply(p, cfg: ModelConfig, x, images=None, kv=None):
+    """Gated cross-attention block.  Pass either raw image embeddings
+    (computes K/V) or precomputed ``kv`` from the cache."""
+    hd = cfg.resolved_head_dim
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    b, s, _ = x.shape
+    q = (xn @ p["attn"]["wq"]).reshape(b, s, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+    if kv is None:
+        k = (images @ p["attn"]["wk"]).reshape(
+            b, -1, cfg.kv_heads, hd).transpose(0, 2, 1, 3)
+        v = (images @ p["attn"]["wv"]).reshape(
+            b, -1, cfg.kv_heads, hd).transpose(0, 2, 1, 3)
+    else:
+        k, v = kv
+    out = L.attention(q, k, v, causal=False)
+    g_attn = jnp.tanh(p["gate_attn"]).astype(x.dtype)
+    g_mlp = jnp.tanh(p["gate_mlp"]).astype(x.dtype)
+    x = x + g_attn * L.project_out(p["attn"], out)
+    x = x + g_mlp * L.swiglu(
+        p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x, (k, v)
+
+
+def _unit_train(params_u, carry, _cache, cfg: ModelConfig, chunked):
+    x, positions, images = carry
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    n_self = jax.tree_util.tree_leaves(params_u["self"])[0].shape[0]
+    for i in range(n_self):
+        p_i = jax.tree.map(lambda a: a[i], params_u["self"])
+        (x, positions), _ = T._block_train(p_i, (x, positions), None, cfg,
+                                           chunked)
+    x, _ = _cross_apply(params_u["cross"], cfg, x, images=images)
+    return (x, positions, images), None
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *,
+            remat: bool = True, return_hidden: bool = False) -> jax.Array:
+    tokens, images = batch["tokens"], batch["images"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    fn = functools.partial(_unit_train, cfg=cfg, chunked=s > 2048)
+    (x, _, _), _ = scan_blocks(params["units"], (x, positions, images), fn,
+                               remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return x @ params["lm_head"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n_units, n_self = layout(cfg)
+    hd = cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    t = T.cache_len(cfg, max_len)
+    n_img = cfg.num_image_tokens
+    return {
+        "k": jnp.zeros((n_units, n_self, batch, cfg.kv_heads, t, hd), dt),
+        "v": jnp.zeros((n_units, n_self, batch, cfg.kv_heads, t, hd), dt),
+        "ck": jnp.zeros((n_units, batch, cfg.kv_heads, n_img, hd), dt),
+        "cv": jnp.zeros((n_units, batch, cfg.kv_heads, n_img, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _unit_prefill(params_u, carry, cache_u, cfg: ModelConfig, chunked):
+    x, positions, images = carry
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    n_self = jax.tree_util.tree_leaves(params_u["self"])[0].shape[0]
+    new_k, new_v = [], []
+    for i in range(n_self):
+        p_i = jax.tree.map(lambda a: a[i], params_u["self"])
+        c_i = {"k": cache_u["k"][i], "v": cache_u["v"][i]}
+        (x, positions), nc = T._block_prefill(p_i, (x, positions), c_i, cfg,
+                                              chunked)
+        new_k.append(nc["k"])
+        new_v.append(nc["v"])
+    x, (ck, cv) = _cross_apply(params_u["cross"], cfg, x, images=images)
+    return (x, positions, images), {
+        "k": jnp.stack(new_k), "v": jnp.stack(new_v), "ck": ck, "cv": cv}
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+    tokens, images = batch["tokens"], batch["images"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    fn = functools.partial(_unit_prefill, cfg=cfg, chunked=s > 2048)
+    layer_cache = {"k": cache["k"], "v": cache["v"],
+                   "ck": cache["ck"], "cv": cache["cv"]}
+    (x, _, _), new_cache = scan_blocks(params["units"],
+                                       (x, positions, images), fn,
+                                       cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {**new_cache, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def _unit_decode(params_u, carry, cache_u, cfg: ModelConfig):
+    x, pos = carry
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    n_self = jax.tree_util.tree_leaves(params_u["self"])[0].shape[0]
+    new_k, new_v = [], []
+    for i in range(n_self):
+        p_i = jax.tree.map(lambda a: a[i], params_u["self"])
+        c_i = {"k": cache_u["k"][i], "v": cache_u["v"][i]}
+        (x, pos), nc = T._block_decode(p_i, (x, pos), c_i, cfg)
+        new_k.append(nc["k"])
+        new_v.append(nc["v"])
+    x, _ = _cross_apply(params_u["cross"], cfg, x,
+                        kv=(cache_u["ck"], cache_u["cv"]))
+    return (x, pos), {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                      "ck": cache_u["ck"], "cv": cache_u["cv"]}
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict):
+    x = params["embed"][tokens]
+    pos = cache["pos"]
+    fn = functools.partial(_unit_decode, cfg=cfg)
+    layer_cache = {"k": cache["k"], "v": cache["v"],
+                   "ck": cache["ck"], "cv": cache["cv"]}
+    (x, _), new_cache = scan_blocks(params["units"], (x, pos), fn,
+                                    cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {**new_cache, "pos": pos + 1}

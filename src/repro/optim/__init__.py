@@ -1,0 +1,21 @@
+"""Optimizers and schedules (pure JAX; no optax available offline)."""
+
+from repro.optim.adam import (
+    AdamState,
+    adam_init,
+    adam_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    warmup_cosine_schedule,
+)
+
+__all__ = [
+    "AdamState",
+    "adam_init",
+    "adam_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+    "warmup_cosine_schedule",
+]

@@ -1,0 +1,92 @@
+"""Adam(W) with decoupled weight decay, global-norm clipping and LR
+schedules.  States are pytrees mirroring the params, so they shard with
+the same PartitionSpecs (FSDP-friendly)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: dict       # first moment (f32)
+    nu: dict       # second moment (f32)
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adam_update(
+    params,
+    grads,
+    state: AdamState,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = 1.0,
+):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    if max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda x: x[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda x: x[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda x: x[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(step, new_mu, new_nu), {"grad_norm": gnorm}
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (min_frac + (1 - min_frac) * cos)
+    return lr
+
+
+def warmup_cosine_schedule(base_lr: float, warmup: int, total_steps: int,
+                           min_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
+    def lr(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return lr

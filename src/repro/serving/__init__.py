@@ -1,0 +1,5 @@
+"""Serving-side optimizations: W8A8 int8 quantized verify path."""
+
+from repro.serving.quant import qdot, quantize_params, quantize_weight, verify_step_q
+
+__all__ = ["qdot", "quantize_params", "quantize_weight", "verify_step_q"]

@@ -1,0 +1,128 @@
+"""W8A8 int8 quantized serving path for the dense family (beyond-paper
+§Perf iteration B4).
+
+405B decode is weight-streaming-bound (§Perf B); int8 weights halve the
+stream.  Weights are per-output-channel symmetric int8; activations are
+dynamically quantized per token (max-abs / 127) so the matmuls run
+s8 x s8 -> s32 and rescale in f32 — the standard W8A8 recipe, and the
+form XLA lowers to native int8 MXU ops on TPU.
+
+Only the big matmuls quantize (attn projections, SwiGLU, LM head); norms,
+embeddings and the KV cache stay bf16.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.stack import scan_blocks
+
+_QNAMES = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "lm_head"}
+
+
+def quantize_weight(w: jax.Array):
+    """(in, out) -> {"q": int8 (in, out), "s": f32 (out,)} per-channel."""
+    w32 = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(w32), axis=0) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def quantize_params(params: dict) -> dict:
+    """Quantize every 2-D matmul weight named in _QNAMES (any stack depth:
+    stacked (L, in, out) quantizes per (L, out) channel)."""
+
+    def visit(path, leaf):
+        name = None
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = e.key
+                break
+        if name in _QNAMES and leaf.ndim >= 2:
+            w32 = leaf.astype(jnp.float32)
+            scale = jnp.max(jnp.abs(w32), axis=-2, keepdims=False) / 127.0
+            scale = jnp.maximum(scale, 1e-8)
+            q = jnp.clip(jnp.round(w32 / scale[..., None, :]), -127, 127)
+            return {"q": q.astype(jnp.int8), "s": scale}
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def qdot(x: jax.Array, wq: dict) -> jax.Array:
+    """W8A8 matmul: x (..., in) bf16 x int8 (in, out) -> (..., out) bf16."""
+    x32 = x.astype(jnp.float32)
+    sx = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0
+    sx = jnp.maximum(sx, 1e-8)
+    xq = jnp.clip(jnp.round(x32 / sx), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq, wq["q"],
+        dimension_numbers=(((xq.ndim - 1,), (wq["q"].ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * sx * wq["s"]
+    return out.astype(x.dtype)
+
+
+def _is_q(w) -> bool:
+    return isinstance(w, dict) and "q" in w and "s" in w
+
+
+def _dense(x, w):
+    return qdot(x, w) if _is_q(w) else x @ w
+
+
+def _project_qkv_q(p, x, num_heads, kv_heads, head_dim):
+    b, s, _ = x.shape
+    q = _dense(x, p["wq"]).reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = _dense(x, p["wk"]).reshape(b, s, kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = _dense(x, p["wv"]).reshape(b, s, kv_heads, head_dim).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _swiglu_q(p, x):
+    gate = jax.nn.silu(_dense(x, p["w_gate"]))
+    return _dense(gate * _dense(x, p["w_up"]), p["w_down"])
+
+
+def _block_verify_q(params_l, carry, cache_l, cfg: ModelConfig):
+    x, pos = carry
+    p = params_l["attn"]
+    hd = cfg.resolved_head_dim
+    b, m, _ = x.shape
+    xin = L.rmsnorm(params_l["attn_norm"], x, cfg.norm_eps)
+    q, k, v = _project_qkv_q(p, xin, cfg.num_heads, cfg.kv_heads, hd)
+    positions = (pos + jnp.arange(m, dtype=jnp.int32))[None, None, :]
+    positions = jnp.broadcast_to(positions, (b, 1, m))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, pos, axis=2)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, pos, axis=2)
+    out = L.attention(q, new_k, new_v, causal=True, q_offset=pos,
+                      kv_len=pos + m)
+    bsz, h, s, d = out.shape
+    x = x + _dense(out.transpose(0, 2, 1, 3).reshape(bsz, s, h * d), p["wo"])
+    x = x + _swiglu_q(params_l["mlp"],
+                      L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
+    return (x, pos), {"k": new_k, "v": new_v}
+
+
+def verify_step_q(params_q: dict, cfg: ModelConfig, tokens: jax.Array,
+                  cache: dict):
+    """Int8 twin of transformer.verify_step (m tokens vs cache)."""
+    assert not cfg.sliding_window
+    x = params_q["embed"][tokens]
+    pos = cache["pos"]
+    fn = functools.partial(_block_verify_q, cfg=cfg)
+    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    (x, _), new_cache = scan_blocks(params_q["layers"], (x, pos), fn,
+                                    cache=layer_cache)
+    x = L.rmsnorm(params_q["final_norm"], x, cfg.norm_eps)
+    logits = _dense(x, params_q["lm_head"])
+    return logits, {"k": new_cache["k"], "v": new_cache["v"],
+                    "pos": pos + tokens.shape[1]}

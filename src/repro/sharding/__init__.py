@@ -1,0 +1,13 @@
+"""Distribution layer: per-arch/shape PartitionSpec rules."""
+
+from repro.sharding.rules import (
+    batch_shardings,
+    cache_shardings,
+    cache_spec,
+    dp_axes,
+    param_spec,
+    params_shardings,
+)
+
+__all__ = ["batch_shardings", "cache_shardings", "cache_spec", "dp_axes",
+           "param_spec", "params_shardings"]

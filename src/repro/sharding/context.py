@@ -1,0 +1,36 @@
+"""Activation-sharding context: lets the dry-run/launcher inject
+``with_sharding_constraint`` specs (e.g. sequence-parallel layer carries)
+into model code without the models depending on any mesh.  Outside a
+context the hooks are no-ops, so CPU tests/examples are unaffected."""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict
+
+import jax
+
+_STATE = threading.local()
+
+
+def _specs() -> Dict[str, object]:
+    return getattr(_STATE, "specs", {})
+
+
+@contextlib.contextmanager
+def activation_sharding(specs: Dict[str, object]):
+    """specs: {hook_name: PartitionSpec}.  Active within the block."""
+    prev = _specs()
+    _STATE.specs = {**prev, **specs}
+    try:
+        yield
+    finally:
+        _STATE.specs = prev
+
+
+def constrain(x, name: str):
+    spec = _specs().get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

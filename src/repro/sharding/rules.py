@@ -1,0 +1,199 @@
+"""Divisibility-aware sharding rules for every architecture family.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+
+Policy (DESIGN.md §5):
+  * batch dims shard over the data-parallel axes (pod+data);
+  * "wide" param dims (attn heads*hd, FFN hidden, vocab, SSM inner) shard
+    over "model" — but only when divisible (smollm's 15 heads, whisper's
+    12 etc. fall back to replication on that dim, which is why the vocab
+    is padded to a multiple of 256: the LM head always shards);
+  * in training mode the contracting/model dim additionally shards over
+    the data axes (FSDP) so 405B-class optimizer state fits;
+  * KV caches shard sequence over "model" (kv_heads < 16 everywhere) and
+    batch over data — the standard long-context serving layout.
+
+Everything is emitted as PartitionSpec pytrees matched per-leaf by name.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# Param-name classification.
+_COL_SHARDED = {  # (in, OUT): shard output dim on model, input dim on fsdp
+    "wq", "wk", "wv", "w_gate", "w_up", "w_in", "in_proj", "w_x",
+    "lru_wa", "lru_wx",
+}
+_ROW_SHARDED = {  # (IN, out): shard input dim on model, output dim on fsdp
+    "wo", "w_down", "w_out", "out_proj",
+}
+_VOCAB_ROWS = {"embed", "pos_dec"}    # (V, D): V on model
+_VOCAB_COLS = {"lm_head"}             # (D, V): V on model
+_FSDP_ONLY = {"router", "f1", "f2", "f3", "c1", "c2", "c3"}
+
+
+def dp_axes(mesh) -> tuple:
+    names = tuple(mesh.axis_names)
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return n % int(mesh.shape[axis]) == 0
+
+
+def _fsdp_axis(n: int, mesh, train: bool) -> Optional[tuple]:
+    if not train:
+        return None
+    axes = dp_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if n % total == 0:
+        return axes
+    if n % int(mesh.shape["data"]) == 0:
+        return ("data",)
+    return None
+
+
+def param_spec(path, leaf, cfg: ModelConfig, mesh, train: bool) -> P:
+    """PartitionSpec for one param leaf, identified by its key path."""
+    name = None
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            name = entry.key
+            break
+    nd = leaf.ndim
+    spec = [None] * nd
+
+    def set_last(axis_idx_from_end, value):
+        spec[nd - 1 - axis_idx_from_end] = value
+
+    if name in _VOCAB_ROWS and nd >= 2:
+        if _div(leaf.shape[-2], mesh, "model"):
+            set_last(1, "model")
+        fa = _fsdp_axis(leaf.shape[-1], mesh, train)
+        if fa:
+            set_last(0, fa)
+    elif name in _VOCAB_COLS and nd >= 2:
+        if _div(leaf.shape[-1], mesh, "model"):
+            set_last(0, "model")
+        fa = _fsdp_axis(leaf.shape[-2], mesh, train)
+        if fa:
+            set_last(1, fa)
+    elif name in _COL_SHARDED and nd >= 2:
+        # Expert weights are (L, E, D, F): prefer EXPERT parallelism over
+        # "model" when E divides (all-to-all token dispatch instead of
+        # per-layer activation all-reduce; Perf log: granite-moe train_4k,
+        # iteration A1).  Falls back to F-sharding (mixtral: E=8 < 16).
+        if nd == 4 and cfg.num_experts and                 leaf.shape[1] == cfg.num_experts and                 _div(cfg.num_experts, mesh, "model"):
+            spec[1] = "model"
+            fa = _fsdp_axis(leaf.shape[-2], mesh, train)
+            if fa:
+                set_last(1, fa)
+        else:
+            if _div(leaf.shape[-1], mesh, "model"):
+                set_last(0, "model")
+            fa = _fsdp_axis(leaf.shape[-2], mesh, train)
+            if fa:
+                set_last(1, fa)
+    elif name in _ROW_SHARDED and nd >= 2:
+        if nd == 4 and cfg.num_experts and                 leaf.shape[1] == cfg.num_experts and                 _div(cfg.num_experts, mesh, "model"):
+            spec[1] = "model"
+            fa = _fsdp_axis(leaf.shape[-1], mesh, train)
+            if fa:
+                set_last(0, fa)
+        else:
+            if _div(leaf.shape[-2], mesh, "model"):
+                set_last(1, "model")
+            fa = _fsdp_axis(leaf.shape[-1], mesh, train)
+            if fa:
+                set_last(0, fa)
+    elif name in _FSDP_ONLY and nd >= 2:
+        fa = _fsdp_axis(leaf.shape[-2], mesh, train)
+        if fa:
+            set_last(1, fa)
+    # conv weights, norms, scalars, biases: replicated.
+    return P(*spec)
+
+
+def params_shardings(params_shape, cfg: ModelConfig, mesh, train: bool):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, cfg, mesh, train)),
+        params_shape)
+
+
+def batch_shardings(batch_specs: dict, mesh):
+    dp = dp_axes(mesh)
+    out = {}
+    for name, spec in batch_specs.items():
+        nd = len(spec.shape)
+        b_ok = spec.shape[0] % int(np.prod([mesh.shape[a] for a in dp])) == 0
+        axes = [dp if b_ok else None] + [None] * (nd - 1)
+        out[name] = NamedSharding(mesh, P(*axes))
+    return out
+
+
+def cache_spec(path, leaf, cfg: ModelConfig, mesh) -> P:
+    """KV/SSM cache sharding: batch on data axes, sequence on model."""
+    name = None
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            name = entry.key
+            break
+    dp = dp_axes(mesh)
+    nd = leaf.ndim
+    shape = leaf.shape
+    spec = [None] * nd
+    if name == "pos" or nd <= 1:
+        return P()
+    if name in ("k", "v", "ck", "cv"):
+        # (..., B, Hkv, T, hd): batch -> data, seq -> model.
+        bdim, hdim, tdim = nd - 4, nd - 3, nd - 2
+        if shape[bdim] % int(np.prod([mesh.shape[a] for a in dp])) == 0:
+            spec[bdim] = dp
+        elif shape[bdim] % int(mesh.shape["data"]) == 0:
+            spec[bdim] = "data"
+        if _div(shape[hdim], mesh, "model"):
+            spec[hdim] = "model"
+        elif _div(shape[tdim], mesh, "model"):
+            spec[tdim] = "model"
+        return P(*spec)
+    if name == "ssm":
+        # (L, B, H, P, N): batch -> data, heads -> model.
+        bdim, hdim = nd - 4, nd - 3
+        if shape[bdim] % int(mesh.shape["data"]) == 0:
+            spec[bdim] = "data"
+        if _div(shape[hdim], mesh, "model"):
+            spec[hdim] = "model"
+        return P(*spec)
+    if name == "conv":
+        # (..., B, W-1, conv_dim): batch -> data, channels -> model.
+        bdim, cdim = nd - 3, nd - 1
+        if shape[bdim] % int(mesh.shape["data"]) == 0:
+            spec[bdim] = "data"
+        if _div(shape[cdim], mesh, "model"):
+            spec[cdim] = "model"
+        return P(*spec)
+    if name == "h":
+        # RG-LRU state (..., B, W): batch -> data, width -> model.
+        bdim, wdim = nd - 2, nd - 1
+        if shape[bdim] % int(mesh.shape["data"]) == 0:
+            spec[bdim] = "data"
+        if _div(shape[wdim], mesh, "model"):
+            spec[wdim] = "model"
+        return P(*spec)
+    return P(*spec)
+
+
+def cache_shardings(cache_specs_tree, cfg: ModelConfig, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf, cfg, mesh)),
+        cache_specs_tree)

@@ -1,0 +1,41 @@
+"""Multi-draft speculative decoding (the paper's Sec. 4 application)."""
+
+from repro.specdec.engine import (
+    GenerationStats,
+    SpecDecConfig,
+    SpecDecEngine,
+    autoregressive_reference,
+    probs_from_logits,
+)
+from repro.specdec.engine_cached import CachedSpecDecEngine
+from repro.specdec.scheduler import SpecDecServer
+from repro.specdec.verify import (
+    StepResult,
+    daliri_verify,
+    draft_token_from_uniforms,
+    gls_verify,
+    gls_verify_strong,
+    gumbel_race_argmin,
+    single_draft_verify,
+    specinfer_verify,
+    spectr_verify,
+)
+
+__all__ = [
+    "CachedSpecDecEngine",
+    "GenerationStats",
+    "SpecDecServer",
+    "SpecDecConfig",
+    "SpecDecEngine",
+    "StepResult",
+    "autoregressive_reference",
+    "daliri_verify",
+    "draft_token_from_uniforms",
+    "gls_verify",
+    "gls_verify_strong",
+    "gumbel_race_argmin",
+    "probs_from_logits",
+    "single_draft_verify",
+    "specinfer_verify",
+    "spectr_verify",
+]

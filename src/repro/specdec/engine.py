@@ -1,0 +1,272 @@
+"""Multi-draft speculative decoding engine (paper Sec. 4, Algorithm 2).
+
+Design notes
+------------
+* Drafts and target are coupled through *common random numbers*: one block
+  draws uniforms U[(L+1), K, N]; draft k samples its j-th token by the
+  Gumbel race on U[j, k] and the GLS verifier races the target
+  distributions on the very same sheet — this is what makes acceptance
+  high AND the output conditionally drafter-invariant (Def. 1).
+* Model evaluation uses fixed-size token buffers so jitted forwards
+  compile once per (batch, buffer) shape: causal attention makes trailing
+  garbage harmless.  The target scores all K draft continuations in one
+  batched forward (the K dimension rides in the batch), matching how a
+  TPU serving deployment folds drafts into the batch (DESIGN.md §3).
+* Strategies: "gls" (Alg. 2), "gls_strong" (App. B), "specinfer",
+  "spectr", "single" (Leviathan), "daliri" (single-draft coupling).
+  K heterogeneous drafters with per-drafter temperatures are supported
+  for the paper's diverse-drafts experiment (Table 2/4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.specdec import verify as V
+
+STRATEGIES = ("gls", "gls_strong", "specinfer", "spectr", "single", "daliri")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecDecConfig:
+    num_drafts: int = 8           # K
+    draft_len: int = 4            # L
+    strategy: str = "gls"
+    target_temp: float = 1.0
+    draft_temps: Optional[tuple] = None   # per-drafter; default all 1.0
+    top_k: int = 50               # paper uses top-K 50 sampling
+    max_new_tokens: int = 64
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+
+    @property
+    def temps(self) -> tuple:
+        if self.draft_temps is not None:
+            assert len(self.draft_temps) == self.num_drafts
+            return tuple(self.draft_temps)
+        return (1.0,) * self.num_drafts
+
+
+@dataclasses.dataclass
+class GenerationStats:
+    output: np.ndarray            # accepted token ids
+    blocks: int                   # target model calls
+    accepted_drafts: int          # accepted DRAFT tokens (excl. bonus)
+
+    @property
+    def block_efficiency(self) -> float:
+        """Tokens emitted per target call (paper's BE metric)."""
+        return len(self.output) / max(self.blocks, 1)
+
+
+def probs_from_logits(logits: jax.Array, temp: float, top_k: int,
+                      vocab_size: int) -> jax.Array:
+    """Temperature + top-k filtered probabilities over the TRUE vocab."""
+    logits = logits[..., :vocab_size].astype(jnp.float32)
+    if temp <= 0:
+        # Greedy as a limiting case: delta on the argmax.
+        return jax.nn.one_hot(jnp.argmax(logits, -1), vocab_size)
+    logits = logits / temp
+    if top_k and top_k < vocab_size:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+class SpecDecEngine:
+    """Speculative decoding over one target and K (possibly distinct)
+    drafters sharing the target's vocabulary."""
+
+    def __init__(self, target: tuple, drafters: Sequence[tuple],
+                 cfg: SpecDecConfig):
+        self.t_params, self.t_cfg = target
+        self.drafters = list(drafters)
+        if len(self.drafters) == 1 and cfg.num_drafts > 1:
+            self.drafters = self.drafters * cfg.num_drafts
+        assert len(self.drafters) == cfg.num_drafts
+        self.cfg = cfg
+        self.vocab = self.t_cfg.vocab_size
+        self._fwd_cache = {}
+
+    # -- jitted, shape-stable model calls ---------------------------------
+    def _buffer_forward(self, params, mcfg: ModelConfig, tokens: jax.Array):
+        key = (id(params), tokens.shape)
+        if key not in self._fwd_cache:
+            def f(p, t):
+                return forward(p, mcfg, {"tokens": t}, remat=False)
+            self._fwd_cache[key] = jax.jit(f)
+        return self._fwd_cache[key](params, tokens)
+
+    def _target_probs_at(self, tokens_buf: jax.Array, positions: np.ndarray):
+        """tokens_buf: (K, T) buffers; returns q at `positions` (per row):
+        (K, len(positions), N)."""
+        logits = self._buffer_forward(self.t_params, self.t_cfg, tokens_buf)
+        sel = logits[:, positions]  # same positions for all rows
+        return probs_from_logits(sel, self.cfg.target_temp, self.cfg.top_k,
+                                 self.vocab)
+
+    def _draft_probs_at(self, k: int, tokens_buf: jax.Array, position: int):
+        params, mcfg = self.drafters[k]
+        logits = self._buffer_forward(params, mcfg, tokens_buf)
+        return probs_from_logits(logits[:, position], self.cfg.temps[k],
+                                 self.cfg.top_k, self.vocab)
+
+    # -- one speculative block --------------------------------------------
+    def _gen_block(self, key: jax.Array, prefix: np.ndarray, buf_len: int):
+        """Generate K drafts of length L from `prefix`, verify, and return
+        (new_tokens list, accepted_draft_count)."""
+        cfg = self.cfg
+        K, Lr = cfg.num_drafts, cfg.draft_len
+        N = self.vocab
+        k_unif, k_strat = jax.random.split(key)
+        # Shared log-uniforms for the whole block: (L+1, K, N).
+        log_u = jnp.log(jax.random.uniform(
+            k_unif, (Lr + 1, K, N),
+            minval=np.finfo(np.float32).tiny, maxval=1.0))
+
+        p0 = len(prefix)
+        # --- draft generation (autoregressive, Gumbel race per drafter) ---
+        draft_tokens = np.zeros((K, Lr), np.int32)
+        draft_probs = np.zeros((K, Lr, N), np.float32)
+        bufs = np.zeros((K, buf_len), np.int32)
+        bufs[:, :p0] = prefix
+        same_drafter = all(d is self.drafters[0] for d in self.drafters)
+        uniform_temp = len(set(cfg.temps)) == 1
+        for j in range(Lr):
+            pos = p0 + j - 1
+            if same_drafter and uniform_temp:
+                p_all = self._draft_probs_at(0, jnp.asarray(bufs), pos)  # (K,N)
+            else:
+                p_all = jnp.stack([
+                    self._draft_probs_at(k, jnp.asarray(bufs[k:k + 1]), pos)[0]
+                    for k in range(K)])
+            toks = V.draft_token_from_uniforms(log_u[j], p_all)  # (K,)
+            draft_tokens[:, j] = np.asarray(toks)
+            draft_probs[:, j] = np.asarray(p_all)
+            bufs[np.arange(K), p0 + j] = draft_tokens[:, j]
+
+        # --- target scoring: one batched forward over the K buffers -------
+        positions = np.arange(p0 - 1, p0 + Lr)  # q^(1..L+1)
+        q_all = np.asarray(self._target_probs_at(jnp.asarray(bufs), positions))
+        # q_all: (K, L+1, N); q_all[k, j] = q(. | X^(k)_{1:j}, c)
+
+        # --- verification loop (Algorithm 2) -------------------------------
+        out_tokens = []
+        active = jnp.ones((K,), bool)
+        accepted_drafts = 0
+        strat_keys = jax.random.split(k_strat, Lr + 1)
+        for j in range(Lr):
+            q_j = jnp.asarray(q_all[:, j])      # (K, N)
+            d_j = jnp.asarray(draft_tokens[:, j])
+            if cfg.strategy == "gls":
+                res = V.gls_verify(log_u[j], d_j, q_j, active)
+            elif cfg.strategy == "gls_strong":
+                res = V.gls_verify_strong(log_u[j], d_j, q_j, active)
+            elif cfg.strategy == "specinfer":
+                res = V.specinfer_verify(strat_keys[j],
+                                         jnp.asarray(draft_probs[:, j]),
+                                         d_j, q_j, active)
+            elif cfg.strategy == "spectr":
+                res = V.spectr_verify(strat_keys[j],
+                                      jnp.asarray(draft_probs[:, j]),
+                                      d_j, q_j, active)
+            elif cfg.strategy == "single":
+                res = V.single_draft_verify(strat_keys[j],
+                                            jnp.asarray(draft_probs[0, j]),
+                                            d_j[0], q_j[0])
+            elif cfg.strategy == "daliri":
+                res = V.daliri_verify(log_u[j, 0], d_j[0], q_j[0])
+            out_tokens.append(int(res.token))
+            if not bool(res.accepted):
+                return out_tokens, accepted_drafts
+            accepted_drafts += 1
+            active = res.new_active
+            if cfg.strategy in ("single", "daliri"):
+                # Single-draft: continue only along draft 0's path.
+                active = jnp.zeros((K,), bool).at[0].set(True)
+
+        # All L draft tokens accepted: emit the bonus token Y_{L+1}.
+        q_last = jnp.asarray(q_all[:, Lr])
+        if cfg.strategy in ("gls", "gls_strong"):
+            act = active if cfg.strategy == "gls" else jnp.ones((K,), bool)
+            score = jnp.log(-log_u[Lr]) - jnp.log(jnp.maximum(q_last, 1e-30))
+            score = jnp.where(q_last > 0, score, jnp.inf)
+            score = jnp.where(act[:, None], score, jnp.inf)
+            bonus = int(jnp.argmin(score) % N)
+        else:
+            k_idx = int(jnp.argmax(active))
+            bonus = int(jax.random.categorical(
+                strat_keys[Lr], jnp.log(jnp.maximum(q_last[k_idx], 1e-30))))
+        out_tokens.append(bonus)
+        return out_tokens, accepted_drafts
+
+    # -- public API ---------------------------------------------------------
+    def generate(self, key: jax.Array, prompt: np.ndarray,
+                 max_new: Optional[int] = None) -> GenerationStats:
+        max_new = max_new or self.cfg.max_new_tokens
+        prefix = np.asarray(prompt, np.int32)
+        buf_len = len(prefix) + max_new + self.cfg.draft_len + 2
+        blocks = 0
+        accepted = 0
+        n0 = len(prefix)
+        while len(prefix) - n0 < max_new:
+            key, sub = jax.random.split(key)
+            new, acc = self._gen_block(sub, prefix, buf_len)
+            prefix = np.concatenate([prefix, np.asarray(new, np.int32)])
+            blocks += 1
+            accepted += acc
+        return GenerationStats(output=prefix[n0:n0 + max_new], blocks=blocks,
+                               accepted_drafts=accepted)
+
+    def serve(self, key: jax.Array, prompts: Sequence[np.ndarray],
+              max_new: Optional[int] = None) -> list:
+        """Batched serving: each request advances one speculative block per
+        round; model calls batch over live requests x drafts."""
+        results = []
+        for i, prompt in enumerate(prompts):
+            results.append(self.generate(jax.random.fold_in(key, i),
+                                         prompt, max_new))
+        return results
+
+
+def autoregressive_reference(key: jax.Array, target: tuple,
+                             prompt: np.ndarray, max_new: int,
+                             temp: float = 1.0, top_k: int = 50,
+                             use_gumbel_trace: bool = True) -> np.ndarray:
+    """Plain autoregressive sampling from the target — the distribution
+    speculative decoding must preserve.  With ``use_gumbel_trace`` the
+    sampler uses the same per-step Gumbel-race construction as GLS with
+    K=1 so sequence-level equality (not just distributional) can be
+    checked under shared randomness."""
+    params, mcfg = target
+    prefix = np.asarray(prompt, np.int32)
+    buf_len = len(prefix) + max_new + 1
+    fwd = jax.jit(lambda p, t: forward(p, mcfg, {"tokens": t}, remat=False))
+    buf = np.zeros((1, buf_len), np.int32)
+    buf[0, :len(prefix)] = prefix
+    out = []
+    n = len(prefix)
+    for i in range(max_new):
+        key, sub = jax.random.split(key)
+        logits = fwd(params, jnp.asarray(buf))[0, n - 1 + i]
+        probs = probs_from_logits(logits, temp, top_k, mcfg.vocab_size)
+        if use_gumbel_trace:
+            log_u = jnp.log(jax.random.uniform(
+                sub, (mcfg.vocab_size,),
+                minval=np.finfo(np.float32).tiny, maxval=1.0))
+            tok = int(V.gumbel_race_argmin(log_u, probs))
+        else:
+            tok = int(jax.random.categorical(
+                sub, jnp.log(jnp.maximum(probs, 1e-30))))
+        out.append(tok)
+        buf[0, n + i] = tok
+    return np.asarray(out, np.int32)

@@ -1,0 +1,172 @@
+"""KV-cached speculative decoding engine (production path, dense family).
+
+The reference engine (engine.py) re-scores the full prefix each block —
+simple and family-agnostic but O(T^2) per sequence.  This engine keeps
+persistent KV caches for target and drafter and advances with the
+multi-token ``verify_step`` (§Perf B2):
+
+  per block:  drafter: K decode_steps x L (drafts ride the batch dim)
+              target:  ONE verify_step over (pending token + L drafts)
+              GLS verification on shared uniforms (Alg. 2)
+              cache rollback = replicate a surviving draft's rows
+
+Cache rollback correctness: row k* survived steps 1..a, so its cache
+slots [pos, pos+a] hold exactly [pending, Y_1..Y_a]; replicating row k*
+into all rows and rewinding pos to pos+a+1 leaves every row's cache equal
+to the accepted prefix.  The bonus/residual token Y_{a+1} becomes the
+next block's pending token (its KV enters the cache when scored).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+from repro.models.transformer import verify_step
+from repro.specdec import verify as V
+from repro.specdec.engine import GenerationStats, SpecDecConfig, probs_from_logits
+
+
+def _tree_select_row(cache, k_star: int, num_rows: int):
+    """Replicate batch row ``k_star`` across all rows of every cache leaf
+    with a batch dimension (layer-stacked leaves: (L, B, ...))."""
+
+    def sel(leaf):
+        if leaf.ndim >= 2 and leaf.shape[1] == num_rows:
+            row = leaf[:, k_star:k_star + 1]
+            return jnp.broadcast_to(row, leaf.shape)
+        return leaf
+
+    return jax.tree.map(sel, cache)
+
+
+class CachedSpecDecEngine:
+    """GLS multi-draft speculative decoding with persistent KV caches.
+    Dense-family target and drafter (the paper-scale pair)."""
+
+    def __init__(self, target: tuple, drafter: tuple, cfg: SpecDecConfig):
+        assert cfg.strategy in ("gls", "gls_strong"), \
+            "cached engine implements the paper's GLS verification"
+        self.t_params, self.t_cfg = target
+        self.d_params, self.d_cfg = drafter
+        assert self.t_cfg.family == "dense" and self.d_cfg.family == "dense"
+        self.cfg = cfg
+        self.vocab = self.t_cfg.vocab_size
+        k = cfg.num_drafts
+        self._d_step = jax.jit(
+            lambda p, t, c: decode_step(p, self.d_cfg, t, c))
+        self._t_verify = jax.jit(
+            lambda p, t, c: verify_step(p, self.t_cfg, t, c))
+        self._t_prefill = jax.jit(
+            lambda p, b, c: prefill(p, self.t_cfg, b, c))
+        self._d_prefill = jax.jit(
+            lambda p, b, c: prefill(p, self.d_cfg, b, c))
+
+    def generate(self, key: jax.Array, prompt: np.ndarray,
+                 max_new: Optional[int] = None) -> GenerationStats:
+        cfg = self.cfg
+        K, Lr = cfg.num_drafts, cfg.draft_len
+        N = self.vocab
+        max_new = max_new or cfg.max_new_tokens
+        prompt = np.asarray(prompt, np.int32)
+        buf = len(prompt) + max_new + Lr + 2
+
+        # Prefill both models with the prompt minus its last token (which
+        # becomes the first pending token), replicated across K rows.
+        toks = jnp.broadcast_to(jnp.asarray(prompt[None, :-1]),
+                                (K, len(prompt) - 1))
+        t_cache = init_cache(self.t_cfg, K, buf)
+        d_cache = init_cache(self.d_cfg, K, buf)
+        _, t_cache = self._t_prefill(self.t_params, {"tokens": toks}, t_cache)
+        _, d_cache = self._d_prefill(self.d_params, {"tokens": toks}, d_cache)
+
+        out = []
+        pending = int(prompt[-1])
+        blocks = 0
+        accepted_total = 0
+        while len(out) < max_new:
+            # Same key derivation as the reference engine so both engines
+            # see identical shared uniforms (exact-match testable).
+            key, sub = jax.random.split(key)
+            k_unif, _ = jax.random.split(sub)
+            log_u = jnp.log(jax.random.uniform(
+                k_unif, (Lr + 1, K, N),
+                minval=np.finfo(np.float32).tiny, maxval=1.0))
+
+            # --- drafts: L decode steps, K rows advance independently ---
+            d_tokens = np.zeros((K, Lr), np.int32)
+            d_cache_blk = d_cache
+            cur = jnp.full((K, 1), pending, jnp.int32)
+            for j in range(Lr):
+                logits, d_cache_blk = self._d_step(self.d_params, cur,
+                                                   d_cache_blk)
+                p_all = probs_from_logits(logits, cfg.temps[0], cfg.top_k, N)
+                tok = V.draft_token_from_uniforms(log_u[j], p_all)
+                d_tokens[:, j] = np.asarray(tok)
+                cur = tok[:, None]
+
+            # --- target: one verify chunk over [pending, drafts] ---
+            chunk = np.concatenate(
+                [np.full((K, 1), pending, np.int32), d_tokens], axis=1)
+            t_logits, t_cache_blk = self._t_verify(
+                self.t_params, jnp.asarray(chunk), t_cache)
+            q_all = probs_from_logits(t_logits, cfg.target_temp, cfg.top_k, N)
+
+            # --- Algorithm 2 verification ---
+            active = jnp.ones((K,), bool)
+            new_tokens = []
+            a = 0
+            for j in range(Lr):
+                if cfg.strategy == "gls":
+                    res = V.gls_verify(log_u[j], jnp.asarray(d_tokens[:, j]),
+                                       q_all[:, j], active)
+                else:
+                    res = V.gls_verify_strong(
+                        log_u[j], jnp.asarray(d_tokens[:, j]),
+                        q_all[:, j], active)
+                new_tokens.append(int(res.token))
+                if not bool(res.accepted):
+                    break
+                a += 1
+                active = res.new_active
+            else:
+                # all L accepted: bonus token from the last distributions
+                act = active if cfg.strategy == "gls" else jnp.ones((K,), bool)
+                score = (jnp.log(-log_u[Lr])
+                         - jnp.log(jnp.maximum(q_all[:, Lr], 1e-30)))
+                score = jnp.where(q_all[:, Lr] > 0, score, jnp.inf)
+                score = jnp.where(act[:, None], score, jnp.inf)
+                new_tokens.append(int(jnp.argmin(score) % N))
+
+            # --- cache rollback ---
+            if a > 0:
+                k_star = int(jnp.argmax(active))
+            else:
+                k_star = 0  # any row: slot[pos] (pending) is identical
+            base_pos = int(t_cache["pos"])
+            t_cache = _tree_select_row(t_cache_blk, k_star, K)
+            d_cache = _tree_select_row(d_cache_blk, k_star, K)
+            t_cache = {**t_cache, "pos": jnp.asarray(base_pos + 1 + a,
+                                                     jnp.int32)}
+            d_cache = {**d_cache, "pos": jnp.asarray(base_pos + 1 + a,
+                                                     jnp.int32)}
+            # Drafter consumed [pending, d_1..d_{L-1}]: valid through
+            # base_pos + a as long as a <= L-1; when a == L the drafter
+            # cache is one token short — feed Y_L before the next block.
+            if a == Lr:
+                extra = jnp.full((K, 1), new_tokens[Lr - 1], jnp.int32)
+                d_cache = {**d_cache, "pos": jnp.asarray(base_pos + Lr,
+                                                         jnp.int32)}
+                _, d_cache = self._d_step(self.d_params, extra, d_cache)
+
+            out.extend(new_tokens)
+            accepted_total += a
+            pending = new_tokens[-1]
+            blocks += 1
+        return GenerationStats(output=np.asarray(out[:max_new], np.int32),
+                               blocks=blocks, accepted_drafts=accepted_total)

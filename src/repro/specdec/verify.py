@@ -1,0 +1,221 @@
+"""Token-level verification strategies for multi-draft speculative decoding.
+
+All verifiers share the same contract, operating on ONE decoding step:
+
+  verify(key, draft_probs (K,N), target_probs (K,N), draft_tokens (K,),
+         active (K,) bool) -> StepResult(token, accepted, new_active)
+
+``target_probs[k]`` is the target distribution conditioned on draft k's
+prefix (they coincide while drafts agree).  ``active`` marks drafts whose
+prefix still matches the accepted output.
+
+Implemented strategies:
+  * ``gls_verify``            — the paper's Algorithm 2 (conditionally
+                                drafter-invariant; min over ACTIVE drafts).
+  * ``gls_verify_strong``     — App. B variant (min over ALL K drafts;
+                                strong drafter invariance, lower acceptance).
+  * ``specinfer_verify``      — SpecInfer recursive rejection sampling.
+  * ``spectr_verify``         — SpecTr-style k-sequential OT verification.
+  * ``single_draft_verify``   — Leviathan et al. (K=1 rejection sampling).
+  * ``daliri_verify``         — Daliri et al. single-draft Gumbel coupling.
+
+Everything is jit-able; randomness is explicit via keys.  GLS variants use
+*shared* uniforms (common random numbers) — the same key must be used by
+the drafter when sampling its tokens for the coupling to take effect
+(see engine.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+class StepResult(NamedTuple):
+    token: jax.Array        # int32 — accepted (or resampled residual) token
+    accepted: jax.Array     # bool — True if token came from some draft
+    new_active: jax.Array   # (K,) bool — drafts still viable AFTER this step
+
+
+def gumbel_race_argmin(log_u: jax.Array, probs: jax.Array) -> jax.Array:
+    """argmin_i  -ln(U_i) / p_i  computed stably in log space.
+
+    log_u: (..., N) log of shared uniforms; probs: (..., N).
+    """
+    log_s = jnp.log(-log_u)  # log(-ln U) = log of Exp(1) sample
+    score = log_s - jnp.log(jnp.maximum(probs, _TINY))
+    score = jnp.where(probs > 0, score, jnp.inf)
+    return jnp.argmin(score, axis=-1).astype(jnp.int32)
+
+
+def draft_token_from_uniforms(log_u: jax.Array, draft_probs: jax.Array):
+    """Gumbel-max draft sampling from the SAME uniforms used at verify."""
+    return gumbel_race_argmin(log_u, draft_probs)
+
+
+# ---------------------------------------------------------------------------
+# GLS (the paper's scheme)
+# ---------------------------------------------------------------------------
+
+
+def gls_verify(log_u: jax.Array, draft_tokens: jax.Array,
+               target_probs: jax.Array, active: jax.Array) -> StepResult:
+    """Algorithm 2, one step.  log_u: (K, N) shared log-uniforms;
+    target_probs: (K, N) — q(. | draft k's prefix); rows for inactive
+    drafts are ignored via +inf race times.
+    """
+    log_s = jnp.log(-log_u)  # (K, N)
+    score = log_s - jnp.log(jnp.maximum(target_probs, _TINY))
+    score = jnp.where(target_probs > 0, score, jnp.inf)
+    score = jnp.where(active[:, None], score, jnp.inf)
+    flat = jnp.argmin(score)
+    token = (flat % score.shape[1]).astype(jnp.int32)
+    new_active = active & (draft_tokens == token)
+    accepted = jnp.any(new_active)
+    return StepResult(token=token, accepted=accepted, new_active=new_active)
+
+
+def gls_verify_strong(log_u: jax.Array, draft_tokens: jax.Array,
+                      target_probs: jax.Array, active: jax.Array) -> StepResult:
+    """App. B: min over ALL drafts regardless of viability -> strong
+    drafter invariance, at an acceptance cost (Prop. 6)."""
+    log_s = jnp.log(-log_u)
+    score = log_s - jnp.log(jnp.maximum(target_probs, _TINY))
+    score = jnp.where(target_probs > 0, score, jnp.inf)
+    flat = jnp.argmin(score)
+    token = (flat % score.shape[1]).astype(jnp.int32)
+    new_active = active & (draft_tokens == token)
+    accepted = jnp.any(new_active)
+    return StepResult(token=token, accepted=accepted, new_active=new_active)
+
+
+# ---------------------------------------------------------------------------
+# SpecInfer (recursive rejection sampling)
+# ---------------------------------------------------------------------------
+
+
+def specinfer_verify(key: jax.Array, draft_probs: jax.Array,
+                     draft_tokens: jax.Array, target_probs: jax.Array,
+                     active: jax.Array) -> StepResult:
+    """SpecInfer: sequentially try each active draft token with standard
+    rejection (u < q(x)/p(x)); on rejection, update the residual
+    q <- norm(max(q - p, 0)) and move to the next draft.  If all fail,
+    sample from the final residual.
+
+    Note the order dependence — the paper's Table 2 exploits exactly this.
+    """
+    k, n = draft_probs.shape
+    keys = jax.random.split(key, k + 1)
+
+    def body(carry, idx):
+        q, done, token = carry
+        x = draft_tokens[idx]
+        px = jnp.maximum(draft_probs[idx, x], _TINY)
+        qx = q[x]
+        u = jax.random.uniform(keys[idx])
+        ok = active[idx] & (u < qx / px) & (~done)
+        token = jnp.where(ok, x, token)
+        done = done | ok
+        # Residual update only if this draft was tried and rejected.
+        tried = active[idx] & (~done)
+        resid = jnp.maximum(q - draft_probs[idx], 0.0)
+        rsum = jnp.sum(resid)
+        resid = jnp.where(rsum > _TINY, resid / rsum, q)
+        q = jnp.where(tried, resid, q)
+        return (q, done, token), ok
+
+    (q, done, token), oks = jax.lax.scan(
+        body, (target_probs[0], False, jnp.int32(0)), jnp.arange(k))
+    resid_tok = jax.random.categorical(keys[k], jnp.log(jnp.maximum(q, _TINY)))
+    token = jnp.where(done, token, resid_tok.astype(jnp.int32))
+    accepted = done
+    # A draft survives only if its token was THE accepted one and it was
+    # previously active.
+    new_active = active & (draft_tokens == token) & accepted
+    return StepResult(token=token, accepted=accepted, new_active=new_active)
+
+
+# ---------------------------------------------------------------------------
+# SpecTr (k-sequential draft selection; i.i.d. proposals)
+# ---------------------------------------------------------------------------
+
+
+def spectr_verify(key: jax.Array, draft_probs: jax.Array,
+                  draft_tokens: jax.Array, target_probs: jax.Array,
+                  active: jax.Array) -> StepResult:
+    """SpecTr K-SEQ (Sun et al. 2023), specialized to i.i.d. proposals:
+    try the J active drafts in order, accepting X_i with probability
+        b(X_i) = min(1, q(X_i) / (J * p(X_i))),
+    and on total rejection sample the deflated residual
+
+        resid(x) ∝ q(x) - p(x) b(x) (1 - (1-ā)^J)/ā,   ā = Σ_x p(x) b(x),
+
+    which makes the output marginal exactly q (the 1/J deflation is what
+    keeps the residual non-negative).
+    """
+    k, n = draft_probs.shape
+    keys = jax.random.split(key, k + 1)
+    p = draft_probs[0]
+    q = target_probs[0]
+    j_act = jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
+
+    b = jnp.minimum(1.0, q / jnp.maximum(j_act * p, _TINY))
+    b = jnp.where(p > 0, b, 0.0)
+    abar = jnp.sum(p * b)
+
+    def body(carry, idx):
+        done, token = carry
+        x = draft_tokens[idx]
+        u = jax.random.uniform(keys[idx])
+        ok = active[idx] & (u < b[x]) & (~done)
+        token = jnp.where(ok, x, token)
+        return (done | ok, token), ok
+
+    (done, token), _ = jax.lax.scan(body, (False, jnp.int32(0)),
+                                    jnp.arange(k))
+    scale = jnp.where(abar > _TINY,
+                      (1.0 - (1.0 - abar) ** j_act) / jnp.maximum(abar, _TINY),
+                      j_act)
+    resid = jnp.maximum(q - p * b * scale, 0.0)
+    rsum = jnp.sum(resid)
+    resid = jnp.where(rsum > _TINY, resid / rsum, q)
+    resid_tok = jax.random.categorical(keys[k], jnp.log(jnp.maximum(resid, _TINY)))
+    token = jnp.where(done, token, resid_tok.astype(jnp.int32))
+    new_active = active & (draft_tokens == token) & done
+    return StepResult(token=token, accepted=done, new_active=new_active)
+
+
+# ---------------------------------------------------------------------------
+# Single-draft baselines
+# ---------------------------------------------------------------------------
+
+
+def single_draft_verify(key: jax.Array, draft_probs: jax.Array,
+                        draft_token: jax.Array,
+                        target_probs: jax.Array) -> StepResult:
+    """Leviathan et al.: accept w.p. min(1, q(x)/p(x)); else sample the
+    normalized residual max(q-p, 0)."""
+    kk1, kk2 = jax.random.split(key)
+    x = draft_token
+    px = jnp.maximum(draft_probs[x], _TINY)
+    ok = jax.random.uniform(kk1) < jnp.minimum(1.0, target_probs[x] / px)
+    resid = jnp.maximum(target_probs - draft_probs, 0.0)
+    rsum = jnp.sum(resid)
+    resid = jnp.where(rsum > _TINY, resid / rsum, target_probs)
+    resid_tok = jax.random.categorical(kk2, jnp.log(jnp.maximum(resid, _TINY)))
+    token = jnp.where(ok, x, resid_tok.astype(jnp.int32))
+    return StepResult(token=token, accepted=ok,
+                      new_active=ok[None])
+
+
+def daliri_verify(log_u: jax.Array, draft_token: jax.Array,
+                  target_probs: jax.Array) -> StepResult:
+    """Daliri et al. single-draft Gumbel coupling: target races on the
+    SAME uniforms the drafter used (K=1 GLS)."""
+    token = gumbel_race_argmin(log_u, target_probs)
+    ok = token == draft_token
+    return StepResult(token=token, accepted=ok, new_active=ok[None])

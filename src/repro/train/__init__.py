@@ -1,0 +1,7 @@
+"""Training loop + checkpointing."""
+
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.loop import TrainConfig, lm_loss, make_train_step, train
+
+__all__ = ["TrainConfig", "lm_loss", "load_checkpoint", "make_train_step",
+           "save_checkpoint", "train"]

@@ -1,0 +1,51 @@
+"""msgpack-based checkpointing for param/optimizer pytrees (no orbax
+offline).  Arrays are serialized as (dtype, shape, bytes); the pytree
+structure is encoded as nested dicts/lists."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)) or hasattr(obj, "dtype"):
+        arr = np.asarray(obj)
+        return {"__nd__": True, "dtype": str(arr.dtype),
+                "shape": list(arr.shape), "data": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _pack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return {"__seq__": type(obj).__name__, "items": [_pack(v) for v in obj]}
+    return obj
+
+
+def _unpack(obj):
+    if isinstance(obj, dict):
+        if obj.get("__nd__"):
+            arr = np.frombuffer(obj["data"], obj["dtype"]).reshape(obj["shape"])
+            return jnp.asarray(arr)
+        if "__seq__" in obj:
+            items = [_unpack(v) for v in obj["items"]]
+            return tuple(items) if obj["__seq__"] == "tuple" else items
+        return {k: _unpack(v) for k, v in obj.items()}
+    return obj
+
+
+def save_checkpoint(path: str, tree) -> None:
+    tmp = path + ".tmp"
+    host_tree = jax.tree.map(
+        lambda a: np.asarray(a) if hasattr(a, "dtype") else a, tree)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(host_tree), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str):
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False,
+                                       strict_map_key=False))

@@ -1,0 +1,155 @@
+"""Training loop: jitted LM train step (optionally pjit-sharded via the
+sharding rules in repro.sharding) + a simple host loop with logging and
+checkpointing."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.optim import AdamState, adam_init, adam_update, warmup_cosine_schedule
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 20
+    total_steps: int = 300
+    weight_decay: float = 0.01
+    max_grad_norm: float = 1.0
+    log_every: int = 20
+    z_loss: float = 1e-4      # logit-norm regularizer (stabilizes bf16)
+    moe_aux_weight: float = 0.01
+
+
+# Above this many (seq x padded_vocab) logit elements per batch row, the
+# cross-entropy is computed in sequence chunks with rematerialization so
+# the full (B, S, V) logits tensor is never alive at once.  At 405B scale
+# (S=4096, V=128k) the monolithic f32 logits would be ~2 TB/device.
+CHUNKED_CE_THRESHOLD = 1 << 24
+CE_CHUNK = 512
+
+
+def _head_matrix(params, cfg: ModelConfig):
+    if cfg.family == "encdec":          # tied head
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def _masked_ce_terms(logits, targets, vocab_size):
+    """Returns (sum nll, sum logz^2, count) for one logits block."""
+    logits = logits.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    mask = jnp.arange(logits.shape[-1]) < vocab_size
+    logits = jnp.where(mask, logits, neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tok = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - tok), jnp.sum(jnp.square(logz))
+
+
+def chunked_ce(x, head, targets, vocab_size, chunk: int = CE_CHUNK):
+    """Cross-entropy over sequence chunks: logits (B, C, V) materialize one
+    chunk at a time and are rematerialized on the backward pass."""
+    b, s, d = x.shape
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    xs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs_c):
+        xc, tc = xs_c
+        nll_s, zz_s = _masked_ce_terms(xc @ head, tc, vocab_size)
+        return (carry[0] + nll_s, carry[1] + zz_s), None
+
+    (nll_sum, zz_sum), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), (0.0, 0.0), (xs, ts))
+    n = b * s
+    return nll_sum / n, zz_sum / n
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict, *,
+            z_loss: float = 1e-4, moe_aux_weight: float = 0.01,
+            remat: bool = True):
+    """Next-token cross-entropy with pad-vocab masking + optional MoE
+    load-balance auxiliary loss.  Large (S x V) uses chunked CE."""
+    aux = 0.0
+    s_dec = batch["targets"].shape[1]
+    use_chunked = s_dec * cfg.padded_vocab > CHUNKED_CE_THRESHOLD
+    if cfg.family == "moe":
+        from repro.models import moe
+        out, aux = moe.forward(params, cfg, batch, remat=remat,
+                               return_aux=True, return_hidden=use_chunked)
+    else:
+        out = forward(params, cfg, batch, remat=remat,
+                      return_hidden=use_chunked)
+    tgt = batch["targets"]
+    if use_chunked:
+        nll, zz = chunked_ce(out, _head_matrix(params, cfg), tgt,
+                             cfg.vocab_size)
+    else:
+        nll_sum, zz_sum = _masked_ce_terms(out, tgt, cfg.vocab_size)
+        n = tgt.size
+        nll, zz = nll_sum / n, zz_sum / n
+    loss = nll + z_loss * zz
+    if cfg.family == "moe":
+        loss = loss + moe_aux_weight * aux
+    return loss, {"nll": nll}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    shardings: Optional[dict] = None) -> Callable:
+    """Build a jitted train step.  ``shardings`` (optional) is a dict with
+    'params'/'opt'/'batch' NamedSharding pytrees for pjit execution."""
+    lr_fn = warmup_cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+
+    def step(params, opt: AdamState, batch):
+        def loss_fn(p):
+            return lm_loss(p, cfg, batch, z_loss=tcfg.z_loss,
+                           moe_aux_weight=tcfg.moe_aux_weight)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = lr_fn(opt.step)
+        params, opt, opt_metrics = adam_update(
+            params, grads, opt, lr, weight_decay=tcfg.weight_decay,
+            max_grad_norm=tcfg.max_grad_norm)
+        return params, opt, {"loss": loss, "lr": lr, **metrics, **opt_metrics}
+
+    kw = {}
+    if shardings is not None:
+        kw = dict(
+            in_shardings=(shardings["params"], shardings["opt"],
+                          shardings["batch"]),
+            out_shardings=(shardings["params"], shardings["opt"], None),
+        )
+    return jax.jit(step, donate_argnums=(0, 1), **kw)
+
+
+def train(params, cfg: ModelConfig, tcfg: TrainConfig, dataset,
+          checkpoint_path: Optional[str] = None, log=print):
+    """Host training loop.  Returns (params, history)."""
+    opt = adam_init(params)
+    step_fn = make_train_step(cfg, tcfg)
+    history = []
+    it = iter(dataset)
+    t0 = time.time()
+    for step in range(tcfg.total_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["elapsed_s"] = round(time.time() - t0, 1)
+            history.append(m)
+            log(f"step {step:4d} loss {m['loss']:.4f} "
+                f"nll {m['nll']:.4f} lr {m['lr']:.2e}")
+    if checkpoint_path:
+        from repro.train.checkpoint import save_checkpoint
+        save_checkpoint(checkpoint_path, {"params": params})
+    return params, history

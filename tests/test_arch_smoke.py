@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests: instantiate a REDUCED variant of each
+assigned architecture's family (<=2-3 layers, d_model<=256, <=4 experts)
+and run one forward step + one serving step on CPU, asserting output
+shapes and absence of NaNs.  Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+BATCH, SEQ = 2, 32
+
+
+def _batch_for(cfg, key):
+    k1, k2 = jax.random.split(key)
+    toks = jax.random.randint(k1, (BATCH, SEQ), 0, cfg.vocab_size - 1)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(k2, (BATCH, SEQ, cfg.d_model),
+                                            cfg.activation_dtype)
+        batch["tokens"] = toks[:, : cfg.max_decoder_len]
+    if cfg.family == "vlm":
+        batch["images"] = jax.random.normal(
+            k2, (BATCH, cfg.num_image_tokens, cfg.d_model),
+            cfg.activation_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_forward_and_serve(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+
+    logits = forward(params, cfg, batch, remat=False)
+    s_dec = batch["tokens"].shape[1]
+    assert logits.shape == (BATCH, s_dec, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits))), f"{arch}: NaN in forward"
+
+    cache = init_cache(cfg, BATCH, 128)
+    last, cache = prefill(params, cfg, batch, cache)
+    assert last.shape == (BATCH, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(last))), f"{arch}: NaN in prefill"
+
+    tok = jnp.zeros((BATCH, 1), jnp.int32)
+    step_logits, cache = decode_step(params, cfg, tok, cache)
+    assert step_logits.shape == (BATCH, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(step_logits))), f"{arch}: NaN in decode"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_train_step(arch):
+    """One gradient step must produce finite grads for every family."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+    targets = batch["tokens"]
+
+    def loss_fn(p):
+        logits = forward(p, cfg, batch, remat=False).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits[:, :-1, : cfg.vocab_size])
+        tgt = targets[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), (
+        f"{arch}: non-finite grads")
+
+
+def test_exact_published_dims():
+    """The full configs must carry the exact assigned dimensions."""
+    expect = {
+        "whisper-small": dict(num_layers=12, d_model=768, num_heads=12,
+                              num_kv_heads=12, d_ff=3072, vocab_size=51865),
+        "granite-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                           num_kv_heads=8, d_ff=14336, vocab_size=49152),
+        "llama-3.2-vision-11b": dict(num_layers=40, d_model=4096,
+                                     num_heads=32, num_kv_heads=8,
+                                     d_ff=14336, vocab_size=128256),
+        "mamba2-370m": dict(num_layers=48, d_model=1024, d_ff=0,
+                            vocab_size=50280, ssm_state=128),
+        "granite-moe-1b-a400m": dict(num_layers=24, d_model=1024,
+                                     num_heads=16, num_kv_heads=8, d_ff=512,
+                                     vocab_size=49155, num_experts=32,
+                                     experts_per_token=8),
+        "llama3-405b": dict(num_layers=126, d_model=16384, num_heads=128,
+                            num_kv_heads=8, d_ff=53248, vocab_size=128256),
+        "mixtral-8x22b": dict(num_layers=56, d_model=6144, num_heads=48,
+                              num_kv_heads=8, d_ff=16384, vocab_size=32768,
+                              num_experts=8, experts_per_token=2),
+        "smollm-360m": dict(num_layers=32, d_model=960, num_heads=15,
+                            num_kv_heads=5, d_ff=2560, vocab_size=49152),
+        "recurrentgemma-2b": dict(num_layers=26, d_model=2560, num_heads=10,
+                                  num_kv_heads=1, d_ff=7680,
+                                  vocab_size=256000),
+        "granite-34b": dict(num_layers=88, d_model=6144, num_heads=48,
+                            num_kv_heads=1, d_ff=24576, vocab_size=49152),
+    }
+    for arch, dims in expect.items():
+        cfg = get_config(arch)
+        for field, val in dims.items():
+            assert getattr(cfg, field) == val, (arch, field)

@@ -1,0 +1,87 @@
+"""Lossy compression application tests (paper Sec. 5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compression import GaussianWZ, run_experiment, wz_round, make_bins
+from repro.core import conditional_lml_bound, wz_error_upper_bound
+
+
+def test_gaussian_matching_grows_with_rate_and_k():
+    cfg = GaussianWZ(sigma2_w_given_a=0.01, n_atoms=1024)
+    key = jax.random.PRNGKey(0)
+    prev = 0.0
+    for l_max in (2, 8, 32):
+        r = run_experiment(key, cfg, k=2, l_max=l_max, trials=800)
+        assert r["match_prob_any"] >= prev - 0.03
+        prev = r["match_prob_any"]
+    r1 = run_experiment(key, cfg, k=1, l_max=8, trials=800)
+    r4 = run_experiment(key, cfg, k=4, l_max=8, trials=800)
+    assert r4["match_prob_any"] > r1["match_prob_any"] + 0.05
+
+
+def test_gls_beats_shared_baseline_multidecoder():
+    cfg = GaussianWZ(sigma2_w_given_a=0.01, n_atoms=1024)
+    key = jax.random.PRNGKey(1)
+    gls = run_experiment(key, cfg, k=4, l_max=4, trials=800)
+    base = run_experiment(key, cfg, k=4, l_max=4, trials=800,
+                          shared_sheet=True)
+    assert gls["match_prob_any"] > base["match_prob_any"] + 0.03
+    assert gls["distortion"] < base["distortion"]
+
+
+def test_k1_gls_equals_baseline():
+    """For K=1 both schemes are the single-decoder IML — identical."""
+    cfg = GaussianWZ(sigma2_w_given_a=0.01, n_atoms=512)
+    key = jax.random.PRNGKey(2)
+    a = run_experiment(key, cfg, k=1, l_max=8, trials=400)
+    b = run_experiment(key, cfg, k=1, l_max=8, trials=400, shared_sheet=True)
+    assert a["match_prob_any"] == pytest.approx(b["match_prob_any"], abs=1e-9)
+
+
+def test_wz_error_bound_holds_discrete():
+    """Proposition 4 on a discrete source where all densities are exact."""
+    n, k, l_max = 64, 3, 4
+    key = jax.random.PRNGKey(3)
+    kq, kd, kb = jax.random.split(key, 3)
+    # Discrete atoms: W uniform prior over n; encoder/decoder targets are
+    # random but consistent: q_enc = p(w|a), q_dec_k = p(w|t_k).
+    q_enc = jax.random.dirichlet(kq, jnp.ones(n))
+    q_dec = jax.random.dirichlet(kd, jnp.ones(n), (k,))
+    log_w_enc = jnp.log(q_enc * n)               # / uniform prior 1/n
+    log_w_dec = jnp.log(q_dec * n)
+    trials = 4000
+    matches = []
+    infos = []
+    for i in range(trials):
+        kk = jax.random.fold_in(key, i)
+        kb_i, kr = jax.random.split(kk)
+        bins = make_bins(kb_i, n, l_max)
+        code = wz_round(kr, log_w_enc, log_w_dec, bins, k)
+        matches.append(bool(jnp.any(code.match)))
+        infos.append(float(jnp.log2(q_enc[code.y]
+                                    / jnp.mean(q_dec[:, code.y]))))
+    err = 1.0 - np.mean(matches)
+    bound = float(wz_error_upper_bound(jnp.asarray(infos), k, l_max))
+    # Prop. 4 is an upper bound on error (up to MC noise).
+    assert err <= bound + 0.05, (err, bound)
+
+
+def test_conditional_lml_shapes():
+    b = conditional_lml_bound(jnp.asarray(0.3), jnp.asarray([0.2, 0.4]), 2)
+    assert 0.0 < float(b) <= 1.0
+
+
+def test_vae_pipeline_end_to_end_small():
+    from repro.compression import VAETrainConfig, train_vae, evaluate_rd
+    from repro.data.mnist import digits_dataset
+    imgs, _ = digits_dataset(400, seed=0)
+    params = train_vae(jax.random.PRNGKey(0), imgs,
+                       VAETrainConfig(steps=40, beta=0.35),
+                       log=lambda *_: None)
+    r = evaluate_rd(jax.random.PRNGKey(1), params, imgs, n_atoms=64,
+                    l_max=8, k=2, trials=8)
+    assert 0.0 <= r["match_prob_any"] <= 1.0
+    assert np.isfinite(r["mse"])

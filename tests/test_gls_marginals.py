@@ -1,0 +1,103 @@
+"""Proposition 1 / 5: GLS produces exact marginals for both parties, and
+the acceptance probability respects Theorem 1 (empirically)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    gls_sample_batch,
+    gls_sample_heterogeneous,
+    iid_draft_acceptance_upper,
+    lml_bound,
+)
+
+TRIALS = 20_000
+
+
+def _random_dist(seed, n):
+    return jax.random.dirichlet(jax.random.PRNGKey(seed), jnp.ones(n))
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_marginals_match(k):
+    n = 12
+    p = _random_dist(0, n)
+    q = _random_dist(1, n)
+    out = gls_sample_batch(jax.random.PRNGKey(2), p, q, k, TRIALS)
+    y_hist = np.bincount(np.asarray(out.y), minlength=n) / TRIALS
+    x_flat = np.asarray(out.x).ravel()
+    x_hist = np.bincount(x_flat, minlength=n) / len(x_flat)
+    # 3-sigma binomial tolerance.
+    tol = 3.0 * np.sqrt(0.25 / TRIALS)
+    assert np.abs(y_hist - np.asarray(q)).max() < tol + 0.5 / TRIALS
+    assert np.abs(x_hist - np.asarray(p)).max() < tol + 0.5 / TRIALS
+
+
+def test_acceptance_monotone_in_k():
+    n = 10
+    p = _random_dist(3, n)
+    q = _random_dist(4, n)
+    rates = []
+    for k in (1, 2, 4, 8, 16):
+        out = gls_sample_batch(jax.random.PRNGKey(5), p, q, k, TRIALS)
+        rates.append(float(jnp.mean(out.accept)))
+    assert all(b >= a - 0.02 for a, b in zip(rates, rates[1:])), rates
+
+
+def test_acceptance_between_bounds():
+    n = 10
+    for seed in range(5):
+        p = _random_dist(10 + seed, n)
+        q = _random_dist(20 + seed, n)
+        for k in (1, 2, 4):
+            out = gls_sample_batch(jax.random.PRNGKey(seed), p, q, k, TRIALS)
+            acc = float(jnp.mean(out.accept))
+            lo = float(lml_bound(p, q, k))
+            hi = float(iid_draft_acceptance_upper(p, q, k))
+            margin = 4.0 * np.sqrt(0.25 / TRIALS)
+            assert acc >= lo - margin, (seed, k, acc, lo)
+            assert acc <= hi + margin, (seed, k, acc, hi)
+
+
+def test_heterogeneous_marginals():
+    n = 8
+    k = 3
+    ps = jnp.stack([_random_dist(30 + i, n) for i in range(k)])
+    q = _random_dist(40, n)
+    keys = jax.random.split(jax.random.PRNGKey(6), TRIALS)
+    out = jax.vmap(lambda kk: gls_sample_heterogeneous(kk, ps, q))(keys)
+    tol = 3.0 * np.sqrt(0.25 / TRIALS)
+    y_hist = np.bincount(np.asarray(out.y), minlength=n) / TRIALS
+    assert np.abs(y_hist - np.asarray(q)).max() < tol
+    for i in range(k):
+        x_hist = np.bincount(np.asarray(out.x[:, i]), minlength=n) / TRIALS
+        assert np.abs(x_hist - np.asarray(ps[i])).max() < tol, i
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 6), st.integers(0, 10_000))
+def test_property_identical_dists_always_accept_k1plus(n, k, seed):
+    """Property: when p == q, every Y is in the draft list with probability
+    -> (high); in particular the race winner for K=1 coincides exactly."""
+    p = _random_dist(seed, n)
+    out = gls_sample_batch(jax.random.PRNGKey(seed + 1), p, p, k, 256)
+    if k == 1:
+        # Identical distributions + identical randomness => identical argmin.
+        assert bool(jnp.all(out.accept))
+    else:
+        assert float(jnp.mean(out.accept)) > 0.95
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 4), st.integers(0, 10_000))
+def test_property_lml_bound_below_upper_bound(n, k, seed):
+    """Property: the LML lower bound never exceeds the i.i.d. upper bound
+    (sanity of both formulas) and lies in [0, 1]."""
+    p = _random_dist(seed, n)
+    q = _random_dist(seed + 1, n)
+    lo = float(lml_bound(p, q, k))
+    hi = float(iid_draft_acceptance_upper(p, q, k))
+    assert 0.0 <= lo <= hi + 1e-6 <= 1.0 + 1e-6

@@ -1,0 +1,140 @@
+"""Pallas kernel validation: shape/dtype sweeps, allclose vs the pure-jnp
+oracles (interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.gls_race.kernel import gls_race
+from repro.kernels.gls_race.ref import gls_race_ref
+
+
+# ---------------------------------------------------------------------------
+# gls_race
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,k,n,tile", [
+    (1, 1, 128, 128),
+    (2, 4, 500, 128),
+    (3, 8, 1024, 256),
+    (1, 2, 50_000, 8192),   # large-vocab case (recurrentgemma-scale / 5)
+])
+def test_gls_race_matches_ref(b, k, n, tile):
+    key = jax.random.PRNGKey(n)
+    ku, kp, kq = jax.random.split(key, 3)
+    u = jax.random.uniform(ku, (b, k, n), minval=1e-30, maxval=1.0)
+    log_s = jnp.log(-jnp.log(u))
+    log_p = jnp.log(jax.random.dirichlet(kp, jnp.ones(n), (b, k)))
+    log_q = jnp.log(jax.random.dirichlet(kq, jnp.ones(n), (b, k)))
+    active = jax.random.bernoulli(kq, 0.7, (b, k))
+    active = active.at[:, 0].set(True)  # at least one active
+    x, y = gls_race(log_s, log_p, log_q, active, tile_n=tile)
+    xr, yr = gls_race_ref(log_s, log_p, log_q, active)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(xr))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_gls_race_zero_prob_symbols_never_win():
+    b, k, n = 2, 3, 256
+    key = jax.random.PRNGKey(0)
+    u = jax.random.uniform(key, (b, k, n), minval=1e-30, maxval=1.0)
+    log_s = jnp.log(-jnp.log(u))
+    p = jax.random.dirichlet(key, jnp.ones(n), (b, k))
+    p = p.at[..., :128].set(0.0)
+    p = p / p.sum(-1, keepdims=True)
+    log_p = jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-37)), -jnp.inf)
+    x, y = gls_race(log_s, log_p, log_p, jnp.ones((b, k), bool), tile_n=128)
+    assert bool(jnp.all(x >= 128)) and bool(jnp.all(y >= 128))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,s,t,d,causal,window", [
+    (1, 4, 4, 128, 128, 64, True, 0),
+    (2, 8, 2, 256, 256, 64, True, 0),     # GQA
+    (1, 4, 1, 192, 192, 128, True, 64),   # MQA + sliding window
+    (1, 2, 2, 100, 100, 64, True, 0),     # non-multiple-of-tile seq
+    (1, 4, 4, 64, 256, 64, False, 0),     # cross-attention shape
+])
+def test_flash_attention_matches_ref(b, h, hkv, s, t, d, causal, window,
+                                     dtype):
+    key = jax.random.PRNGKey(s + t)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, s, d), dtype)
+    k = jax.random.normal(kk, (b, hkv, t, d), dtype)
+    v = jax.random.normal(kv, (b, hkv, t, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          tq=64, tk=64)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,t,d,tk", [
+    (1, 4, 4, 128, 64, 128),
+    (2, 8, 2, 512, 64, 128),
+    (4, 16, 1, 300, 128, 128),   # MQA, ragged cache length
+])
+def test_decode_attention_matches_ref(b, h, hkv, t, d, tk, dtype):
+    key = jax.random.PRNGKey(t)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, h, d), dtype)
+    k = jax.random.normal(kk, (b, hkv, t, d), dtype)
+    v = jax.random.normal(kv, (b, hkv, t, d), dtype)
+    kv_len = jax.random.randint(kl, (b,), 1, t + 1)
+    out = decode_attention(q, k, v, kv_len, tk=tk)
+    ref = decode_attention_ref(q, k, v, kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_decode_attention_single_valid_token():
+    b, h, hkv, t, d = 1, 2, 1, 64, 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, t, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, t, d))
+    kv_len = jnp.asarray([1])
+    out = decode_attention(q, k, v, kv_len, tk=32)
+    # With one valid token, output == v[:, :, 0] broadcast over groups.
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(v[0, 0, 0]),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-attention layer vs flash kernel (the jnp twin used inside models)
+# ---------------------------------------------------------------------------
+
+
+def test_model_chunked_attention_matches_kernel():
+    from repro.models.layers import chunked_attention
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, h, hkv, s, d = 1, 4, 2, 256, 64
+    q = jax.random.normal(kq, (b, h, s, d))
+    k = jax.random.normal(kk, (b, hkv, s, d))
+    v = jax.random.normal(kv, (b, hkv, s, d))
+    a = chunked_attention(q, k, v, causal=True, kv_block=64)
+    bref = flash_attention(q, k, v, causal=True, tq=64, tk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bref),
+                               atol=2e-5, rtol=2e-5)

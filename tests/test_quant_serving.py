@@ -1,0 +1,51 @@
+"""W8A8 int8 serving path (§Perf B4): quantized verify_step must agree
+with the bf16 path on top-1 tokens and stay within a small relative
+logit error; the quantizer round-trips weights within int8 resolution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_cache, init_params, prefill
+from repro.models.transformer import verify_step
+from repro.serving import qdot, quantize_params, quantize_weight, verify_step_q
+
+
+def test_quantize_weight_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.3
+    q = quantize_weight(w)
+    deq = q["q"].astype(jnp.float32) * q["s"]
+    # max error bounded by half a quantization step per channel
+    step = np.asarray(q["s"])
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    assert (err <= 0.51 * step[None, :]).all()
+
+
+def test_qdot_matches_float_dot():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 32)) * 0.2
+    got = qdot(x, quantize_weight(w))
+    ref = x @ w
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.05, rel
+
+
+def test_verify_step_q_top1_agreement():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256,
+                      vocab_size=256, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pq = quantize_params(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 200)
+    cache = init_cache(cfg, 2, 64)
+    _, c1 = prefill(params, cfg, {"tokens": toks[:, :6]}, cache)
+    c2 = jax.tree.map(lambda a: a, c1)
+    ref, _ = verify_step(params, cfg, toks[:, 6:11], c1)
+    got, _ = verify_step_q(pq, cfg, toks[:, 6:11], c2)
+    top_ref = jnp.argmax(ref[..., :cfg.vocab_size], -1)
+    top_got = jnp.argmax(got[..., :cfg.vocab_size], -1)
+    assert float(jnp.mean(top_ref == top_got)) >= 0.9
+    rel = float(jnp.mean(jnp.abs(ref - got)) / jnp.mean(jnp.abs(ref)))
+    assert rel < 0.1, rel

@@ -1,0 +1,34 @@
+"""Serving scheduler: queueing, admission, completion, metrics."""
+
+import jax
+import numpy as np
+
+from repro.models import ModelConfig, init_params
+from repro.specdec import SpecDecConfig, SpecDecEngine
+from repro.specdec.scheduler import SpecDecServer
+
+
+def test_server_drains_queue_with_metrics():
+    tcfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=48,
+                       num_heads=4, num_kv_heads=2, head_dim=12, d_ff=96,
+                       vocab_size=32, dtype="float32")
+    dcfg = tcfg.replace(name="d", num_layers=1)
+    tp = init_params(jax.random.PRNGKey(0), tcfg)
+    dp = init_params(jax.random.PRNGKey(1), dcfg)
+    eng = SpecDecEngine((tp, tcfg), [(dp, dcfg)],
+                        SpecDecConfig(num_drafts=2, draft_len=2,
+                                      strategy="gls", top_k=0))
+    server = SpecDecServer(eng, max_batch=2)
+    uids = [server.submit(np.array([1, 2, 3], np.int32), max_new=6)
+            for _ in range(5)]
+    done = server.run(jax.random.PRNGKey(7))
+    assert len(done) == 5
+    assert sorted(r.uid for r in done) == sorted(uids)
+    for r in done:
+        assert len(r.output) == 6
+        assert r.t_first is not None and r.t_done is not None
+    m = server.metrics
+    assert m.completed == 5
+    assert m.total_tokens == 30
+    assert m.tokens_per_s > 0
+    assert 1.0 <= m.mean_block_efficiency <= 3.0
