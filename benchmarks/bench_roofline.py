@@ -10,6 +10,14 @@ Conventions (see EXPERIMENTS.md §Roofline notes):
     inflate weight bytes ~2x, recorded as-is);
   * collective term is loop-aware (while-loop trip counts parsed from the
     HLO and propagated through nesting).
+
+Also microbenches the fused block-verification op (block_verify.py) on
+both backends: the (L+1, K, N) race table is streamed once — ~3 flops
+per cell against 4 bytes of uniforms + 4 of probs — so the op is firmly
+memory-bound and its analytic bytes/flops are emitted alongside measured
+wall-clock.  The "pallas" rows run the gls_race row kernel in interpret
+mode on CPU (this container has no TPU); on-device numbers come from the
+same call with interpret=False.
 """
 
 from __future__ import annotations
@@ -17,11 +25,51 @@ from __future__ import annotations
 import glob
 import json
 import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 
 SWEEP_DIR = os.path.join(os.path.dirname(__file__), "..", "dryrun_results",
                          "sweep")
+
+
+def _verify_block_rows(fast: bool):
+    """Measured + analytic roofline rows for the fused verifier."""
+    from repro.specdec.block_verify import block_verify as fused_verify
+
+    l_n, n = 4, 2048
+    reps = 5 if fast else 20
+    rows = []
+    for k in (2, 8):
+        kk = jax.random.PRNGKey(0)
+        ku, kq, kd = jax.random.split(kk, 3)
+        log_u = jnp.log(jax.random.uniform(
+            ku, (l_n + 1, k, n), minval=np.finfo(np.float32).tiny,
+            maxval=1.0))
+        q = jax.random.dirichlet(kq, jnp.ones(n), (k, l_n + 1))
+        d = jax.random.randint(kd, (k, l_n), 0, n, jnp.int32)
+        strat_keys = jax.random.split(kk, l_n + 1)
+        cells = (l_n + 1) * k * n
+        bytes_accessed = 2 * 4 * cells          # uniforms + target probs
+        flops = 3 * cells                       # log, sub, min-reduce
+        for backend in ("xla", "pallas"):
+            fn = lambda: fused_verify(
+                log_u, d, None, q, strat_keys, strategy="gls",
+                backend=backend).tokens.block_until_ready()
+            fn()  # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn()
+            us = (time.perf_counter() - t0) * 1e6 / reps
+            rows.append((f"verify_block_{backend}_K{k}", us,
+                         f"bytes={bytes_accessed};flops={flops};"
+                         f"intensity={flops / bytes_accessed:.2f};"
+                         f"L={l_n};N={n};interpret=True"))
+    return rows
 
 
 def run(fast: bool = False):
@@ -44,6 +92,8 @@ def run(fast: bool = False):
     if not rows:
         emit("roofline_missing", 0.0,
              "run repro.launch.sweep first (dryrun_results/sweep)")
+    for name, us, derived in _verify_block_rows(fast):
+        emit(name, us, derived)
     return rows
 
 

@@ -1,0 +1,110 @@
+"""Serving-path benchmark: fused verification backends and the batched
+scheduler.
+
+Two comparisons the serving refactor is accountable for:
+
+  * verifier backends — "legacy" (per-token host loop, 2 syncs/token) vs
+    "xla" (one jitted block) vs "pallas" (block race through the
+    kernels/gls_race row kernel): tokens/s and verification host-sync
+    counts on the same trained pair;
+  * scheduler paths — sequential (R target forwards per round) vs
+    batched (ONE (R*K, T) target forward per round): tokens/s, forwards
+    per round, and an output-equality check (the two paths must be
+    bit-identical).
+
+``collect()`` returns the JSON payload CI archives as BENCH_specdec.json.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.bench_table1_iid_drafts import collect as table1_collect
+from benchmarks.common import emit
+from benchmarks.lm_pair import bench_prompts, get_pair
+from repro.specdec import SpecDecConfig, SpecDecEngine, SpecDecServer
+
+L = 4
+MAX_NEW = 32
+
+
+def _bench_backends(*, k=8, max_new=MAX_NEW, n_prompts=3):
+    rows = []
+    for backend in ("legacy", "xla", "pallas"):
+        rows.extend(table1_collect(
+            ks=(k,), strategies=("gls",), backend=backend,
+            max_new=max_new, n_prompts=n_prompts))
+    return rows
+
+
+def _bench_scheduler(target, drafter, *, n_requests=6, max_new=MAX_NEW):
+    corpus = bench_prompts(n_requests, length=12)
+    out = {}
+    outputs = {}
+    for mode, batched in (("sequential", False), ("batched", True)):
+        eng = SpecDecEngine(
+            target, [drafter],
+            SpecDecConfig(num_drafts=4, draft_len=L, strategy="gls",
+                          top_k=50, max_new_tokens=max_new))
+        server = SpecDecServer(eng, max_batch=3, batched=batched)
+        for p in corpus:
+            server.submit(p, max_new=max_new)
+        done = server.run(jax.random.PRNGKey(7))
+        m = server.metrics
+        out[mode] = {
+            "tokens_per_s": m.tokens_per_s,
+            "mean_block_efficiency": m.mean_block_efficiency,
+            "rounds": m.rounds,
+            "target_forwards": m.target_forwards,
+            "host_syncs": m.host_syncs,
+        }
+        outputs[mode] = {r.uid: list(r.output) for r in done}
+    out["bit_identical"] = outputs["sequential"] == outputs["batched"]
+    return out
+
+
+def collect(fast: bool = True):
+    """BENCH_specdec.json payload: BE + tokens/s for gls vs specinfer vs
+    spectr at K in {2, 8}, backend deltas, scheduler path deltas."""
+    target, drafter = get_pair()   # trains once; later calls hit the cache
+    max_new = MAX_NEW if fast else 48
+    strat_rows = table1_collect(ks=(2, 8),
+                                strategies=("gls", "specinfer", "spectr"),
+                                max_new=max_new)
+    strategies = {}
+    for r in strat_rows:
+        strategies.setdefault(r["strategy"], {})[f"K{r['K']}"] = {
+            "block_efficiency": r["block_efficiency"],
+            "tokens_per_s": r["tokens_per_s"],
+        }
+    return {
+        "draft_len": L,
+        "max_new_tokens": max_new,
+        "strategies": strategies,
+        "verifier_backends": _bench_backends(max_new=max_new),
+        "scheduler": _bench_scheduler(target, drafter, max_new=max_new),
+    }
+
+
+def run(fast: bool = False):
+    payload = collect(fast=fast)
+    for r in payload["verifier_backends"]:
+        emit(f"serve_backend_{r['backend']}_gls_K{r['K']}",
+             r["us_per_prompt"],
+             f"tok_s={r['tokens_per_s']:.1f};host_syncs={r['host_syncs']};"
+             f"BE={r['block_efficiency']:.3f}")
+    sched = payload["scheduler"]
+    for mode in ("sequential", "batched"):
+        m = sched[mode]
+        emit(f"scheduler_{mode}", 0.0,
+             f"tok_s={m['tokens_per_s']:.1f};rounds={m['rounds']};"
+             f"target_forwards={m['target_forwards']};"
+             f"host_syncs={m['host_syncs']}")
+    emit("scheduler_paths_bit_identical", 0.0,
+         str(sched["bit_identical"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -2,7 +2,10 @@
 block efficiency (BE) per strategy and draft count K, on a trained
 target/drafter pair (CPU-scale stand-in for Qwen 7B/0.5B; see DESIGN.md
 §6).  Token-rate speedups are replaced by BE + verified-FLOP ratios since
-this container has no accelerator wall-clock."""
+this container has no accelerator wall-clock; per-row tokens/s and the
+verification host-sync count are still recorded so the fused-verifier
+trajectory (legacy per-token loop vs one jitted block) is tracked.
+"""
 
 from __future__ import annotations
 
@@ -22,28 +25,57 @@ MAX_NEW = 48
 N_PROMPTS = 3
 
 
-def run(fast: bool = False):
+def _measure(target, drafter, prompts, strategy, k, *, backend="xla",
+             max_new=MAX_NEW):
+    kk = 1 if strategy in ("daliri", "single") else k
+    eng = SpecDecEngine(
+        target, [drafter],
+        SpecDecConfig(num_drafts=kk, draft_len=L, strategy=strategy,
+                      top_k=50, max_new_tokens=max_new,
+                      verifier_backend=backend))
+    t0 = time.perf_counter()
+    stats = [eng.generate(jax.random.PRNGKey(100 + i), p)
+             for i, p in enumerate(prompts)]
+    dt = time.perf_counter() - t0
+    toks = sum(len(s.output) for s in stats)
+    return {
+        "strategy": strategy,
+        "K": kk,
+        "backend": backend,
+        "block_efficiency": float(np.mean([s.block_efficiency
+                                           for s in stats])),
+        "tokens_per_s": toks / max(dt, 1e-9),
+        "host_syncs": int(sum(s.host_syncs for s in stats)),
+        "blocks": int(sum(s.blocks for s in stats)),
+        "us_per_prompt": dt * 1e6 / len(prompts),
+    }
+
+
+def collect(ks=KS, strategies=STRATEGIES, *, backend="xla",
+            max_new=MAX_NEW, n_prompts=N_PROMPTS):
+    """Measured rows for the JSON artifact (and the CSV emitter)."""
     target, drafter = get_pair()
-    prompts = bench_prompts(N_PROMPTS)
-    ks = (8,) if fast else KS
-    rows = {}
-    for strategy in STRATEGIES:
+    prompts = bench_prompts(n_prompts)
+    rows = []
+    for strategy in strategies:
         for k in ks:
-            if strategy == "daliri" and k != ks[-1]:
+            if strategy in ("daliri", "single") and k != ks[-1]:
                 continue
-            kk = 1 if strategy == "daliri" else k
-            eng = SpecDecEngine(
-                target, [drafter],
-                SpecDecConfig(num_drafts=kk, draft_len=L, strategy=strategy,
-                              top_k=50, max_new_tokens=MAX_NEW))
-            t0 = time.perf_counter()
-            stats = [eng.generate(jax.random.PRNGKey(100 + i), p)
-                     for i, p in enumerate(prompts)]
-            dt_us = (time.perf_counter() - t0) * 1e6 / len(prompts)
-            be = float(np.mean([s.block_efficiency for s in stats]))
-            rows[(strategy, kk)] = be
-            emit(f"table1_iid_{strategy}_K{kk}", dt_us, f"BE={be:.3f};L={L}")
+            rows.append(_measure(target, drafter, prompts, strategy, k,
+                                 backend=backend, max_new=max_new))
     return rows
+
+
+def run(fast: bool = False):
+    rows = collect(ks=(8,) if fast else KS)
+    out = {}
+    for r in rows:
+        emit(f"table1_iid_{r['strategy']}_K{r['K']}", r["us_per_prompt"],
+             f"BE={r['block_efficiency']:.3f};L={L};"
+             f"tok_s={r['tokens_per_s']:.1f};"
+             f"host_syncs={r['host_syncs']};backend={r['backend']}")
+        out[(r["strategy"], r["K"])] = r["block_efficiency"]
+    return out
 
 
 if __name__ == "__main__":

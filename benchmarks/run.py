@@ -2,10 +2,18 @@
 Prints ``name,us_per_call,derived`` CSV (harness contract).
 
 Set REPRO_BENCH_FAST=0 for the full (slower) configurations.
+
+``--quick`` runs only the spec-dec serving benchmark and writes its JSON
+payload (block efficiency + tokens/s for gls vs specinfer vs spectr at
+K in {2, 8}, verifier-backend host-sync deltas, batched-vs-sequential
+scheduler tokens/s) to BENCH_specdec.json — the artifact CI archives so
+the perf trajectory is tracked per commit.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 import traceback
@@ -15,13 +23,33 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
 
+def quick(out_path: str) -> None:
+    from benchmarks import bench_serving_backends
+    payload = bench_serving_backends.run(fast=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {out_path}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="spec-dec serving benchmark only; write "
+                         "BENCH_specdec.json")
+    ap.add_argument("--out", default="BENCH_specdec.json",
+                    help="JSON artifact path for --quick")
+    args = ap.parse_args()
+    if args.quick:
+        quick(args.out)
+        return
+
     from benchmarks import (
         bench_ablation_draft_len,
         bench_fig2_gaussian,
         bench_fig4_mnist,
         bench_fig6_toy_acceptance,
         bench_roofline,
+        bench_serving_backends,
         bench_table1_iid_drafts,
         bench_table2_diverse_drafts,
     )
@@ -29,6 +57,7 @@ def main() -> None:
         ("fig6", bench_fig6_toy_acceptance),
         ("table1", bench_table1_iid_drafts),
         ("table2", bench_table2_diverse_drafts),
+        ("serving", bench_serving_backends),
         ("fig2", bench_fig2_gaussian),
         ("fig4", bench_fig4_mnist),
         ("ablation_L", bench_ablation_draft_len),

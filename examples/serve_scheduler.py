@@ -2,20 +2,24 @@
 GLS speculative-decoding engine, with serving metrics (tokens/s, mean
 block efficiency, per-request latencies).
 
+Runs the same request trace through BOTH scheduler paths — sequential
+(one engine block per request per round) and batched (all live requests'
+draft buffers stacked into one (R*K, T) target forward per round) — and
+checks their outputs are bit-identical while reporting the tokens/s and
+target-forward-count deltas.
+
 Run:  PYTHONPATH=src python examples/serve_scheduler.py [--requests 6]
 """
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
-from repro.data import encode, synthetic_corpus
+from repro.data import encode, lm_dataset, synthetic_corpus
 from repro.models import ModelConfig, init_params
 from repro.specdec import SpecDecConfig, SpecDecEngine, SpecDecServer
 from repro.train import TrainConfig, train
-from repro.data import lm_dataset
 
 VOCAB = 128
 TARGET = ModelConfig(name="sched-target", family="dense", num_layers=3,
@@ -44,25 +48,39 @@ def main():
                               log_every=args.steps),
                   lm_dataset(16, 96, VOCAB, seed=1, num_sentences=4000))
 
-    eng = SpecDecEngine((tp, TARGET), [(dp, DRAFTER)],
-                        SpecDecConfig(num_drafts=4, draft_len=3,
-                                      strategy="gls", top_k=50))
-    server = SpecDecServer(eng, max_batch=args.max_batch)
     corpus = encode(synthetic_corpus(60, seed=11)) % VOCAB
-    for i in range(args.requests):
-        server.submit(corpus[i * 29:i * 29 + 12], max_new=args.max_new)
 
-    print(f"\n== serving {args.requests} requests "
-          f"(max_batch={args.max_batch}) ==")
-    done = server.run(jax.random.PRNGKey(7))
-    for r in done:
-        lat = (r.t_done - r.t_submit)
-        print(f"req {r.uid}: {len(r.output)} tokens, "
-              f"BE={r.block_efficiency:.2f}, latency={lat:.1f}s")
-    m = server.metrics
-    print(f"\nthroughput: {m.tokens_per_s:.1f} tok/s  "
-          f"mean BE: {m.mean_block_efficiency:.2f}  "
-          f"completed: {m.completed}")
+    def serve(batched):
+        eng = SpecDecEngine((tp, TARGET), [(dp, DRAFTER)],
+                            SpecDecConfig(num_drafts=4, draft_len=3,
+                                          strategy="gls", top_k=50))
+        server = SpecDecServer(eng, max_batch=args.max_batch,
+                               batched=batched)
+        for i in range(args.requests):
+            server.submit(corpus[i * 29:i * 29 + 12], max_new=args.max_new)
+        done = server.run(jax.random.PRNGKey(7))
+        return server, done
+
+    outputs = {}
+    for mode, batched in (("sequential", False), ("batched", True)):
+        print(f"\n== serving {args.requests} requests "
+              f"(max_batch={args.max_batch}, mode={mode}) ==")
+        server, done = serve(batched)
+        for r in done:
+            lat = (r.t_done - r.t_submit)
+            print(f"req {r.uid}: {len(r.output)} tokens, "
+                  f"BE={r.block_efficiency:.2f}, latency={lat:.1f}s")
+        m = server.metrics
+        print(f"throughput: {m.tokens_per_s:.1f} tok/s  "
+              f"mean BE: {m.mean_block_efficiency:.2f}  "
+              f"completed: {m.completed}  rounds: {m.rounds}  "
+              f"target-forwards: {m.target_forwards}")
+        outputs[mode] = {r.uid: list(r.output) for r in done}
+
+    match = outputs["sequential"] == outputs["batched"]
+    print(f"\nbatched output == sequential output: {match}")
+    if not match:
+        raise SystemExit("scheduler paths diverged!")
 
 
 if __name__ == "__main__":

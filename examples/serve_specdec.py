@@ -1,9 +1,12 @@
 """End-to-end driver: train a target LM + a small drafter on the synthetic
 corpus, then SERVE a batch of requests with drafter-invariant multi-draft
 speculative decoding (paper Alg. 2), comparing block efficiency across
-verification strategies.
+verification strategies — and verification backends: the legacy per-token
+host loop vs the fused device-side block verifier ("xla"), vs the fused
+verifier racing through the Pallas gls_race kernel ("pallas").
 
 Run:  PYTHONPATH=src python examples/serve_specdec.py [--steps 150]
+                                                      [--backend xla]
 """
 
 import argparse
@@ -33,6 +36,9 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--backend", default="xla",
+                    choices=("legacy", "xla", "pallas"),
+                    help="verifier backend for the strategy table")
     args = ap.parse_args()
 
     print("== training target + drafter on the synthetic corpus ==")
@@ -49,22 +55,39 @@ def main():
     prompts = [np.asarray(corpus[i * 53:i * 53 + 16], np.int32)
                for i in range(args.requests)]
 
-    print("\n== serving batched requests ==")
-    for strategy in ("gls", "specinfer", "daliri"):
-        k = 1 if strategy == "daliri" else 8
+    def measure(strategy, k, backend):
         eng = SpecDecEngine(
             (tparams, TARGET), [(dparams, DRAFTER)],
             SpecDecConfig(num_drafts=k, draft_len=4, strategy=strategy,
-                          top_k=50, max_new_tokens=args.max_new))
+                          top_k=50, max_new_tokens=args.max_new,
+                          verifier_backend=backend))
         t0 = time.time()
         results = eng.serve(jax.random.PRNGKey(7), prompts)
         dt = time.time() - t0
+        toks = sum(len(r.output) for r in results)
+        return results, dt, toks / max(dt, 1e-9), \
+            sum(r.host_syncs for r in results)
+
+    print(f"\n== serving batched requests (backend={args.backend}) ==")
+    for strategy in ("gls", "specinfer", "daliri"):
+        k = 1 if strategy == "daliri" else 8
+        results, dt, tps, syncs = measure(strategy, k, args.backend)
         be = float(np.mean([r.block_efficiency for r in results]))
-        print(f"{strategy:10s} K={k}  BE={be:.2f}  "
-              f"({dt:.1f}s for {len(prompts)} requests)")
+        print(f"{strategy:10s} K={k}  BE={be:.2f}  {tps:6.1f} tok/s  "
+              f"verify-syncs={syncs}  ({dt:.1f}s for {len(prompts)} "
+              f"requests)")
         if strategy == "gls":
             sample = detok(results[0].output)
             print(f"           sample output: {sample[:72]!r}")
+
+    print("\n== verifier backends (gls, K=8): host-sync and tokens/s "
+          "deltas ==")
+    base_tps = None
+    for backend in ("legacy", "xla", "pallas"):
+        results, dt, tps, syncs = measure("gls", 8, backend)
+        base_tps = base_tps or tps
+        print(f"{backend:8s} {tps:6.1f} tok/s ({tps / base_tps:4.2f}x)  "
+              f"verify-syncs={syncs}")
 
 
 if __name__ == "__main__":

@@ -69,6 +69,86 @@ def _kernel(log_s_ref, log_p_ref, log_q_ref, active_ref,
         y_ref[0, 0] = targ_ref[0, 0]
 
 
+def _row_kernel(log_s_ref, log_q_ref,
+                rmin_out_ref, rarg_out_ref,
+                rmin_ref, rarg_ref,
+                *, tile_n: int, n_tiles: int):
+    """Per-row (min, argmin) of the race table ``log_s - log_q``.
+
+    The target side of Algorithm 2 needs per-(step, draft) row statistics
+    — the evolving ``active`` mask is applied OUTSIDE, on (L+1, K)
+    scalars — so one batched pass over (B=L+1, K, N) serves the whole
+    verification block (DESIGN.md §3)."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        rmin_ref[...] = jnp.full_like(rmin_ref, jnp.inf)
+        rarg_ref[...] = jnp.zeros_like(rarg_ref)
+
+    log_s = log_s_ref[0]          # (K, TILE_N)
+    log_q = log_q_ref[0]
+
+    score = log_s - log_q
+    score = jnp.where(log_q > -jnp.inf, score, jnp.inf)
+    tile_min = jnp.min(score, axis=1)                        # (K,)
+    tile_arg = jnp.argmin(score, axis=1).astype(jnp.int32)
+    tile_idx = t * tile_n + tile_arg
+    better = tile_min < rmin_ref[:, 0]
+    rmin_ref[:, 0] = jnp.where(better, tile_min, rmin_ref[:, 0])
+    rarg_ref[:, 0] = jnp.where(better, tile_idx, rarg_ref[:, 0])
+
+    @pl.when(t == n_tiles - 1)
+    def _emit():
+        rmin_out_ref[0, :] = rmin_ref[:, 0]
+        rarg_out_ref[0, :] = rarg_ref[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def gls_row_race(log_s: jax.Array, log_q: jax.Array, *,
+                 tile_n: int = DEFAULT_TILE_N, interpret: bool = True):
+    """Per-row GLS race statistics.  log_s/log_q: (B, K, N) f32.
+
+    Returns (rmin (B, K) f32, rarg (B, K) i32): the minimum race time and
+    its vocab index for every (batch, draft) row.  ``-inf`` in log_q
+    marks zero-probability symbols (never win).  Ties break toward the
+    lower vocab index, matching ``jnp.argmin``.
+    """
+    b, k, n = log_s.shape
+    if n % tile_n:
+        pad = tile_n - n % tile_n
+        log_s = jnp.pad(log_s, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=0.0)
+        log_q = jnp.pad(log_q, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=jnp.float32(-jnp.inf))
+        n = n + pad
+    n_tiles = n // tile_n
+
+    kernel = functools.partial(_row_kernel, tile_n=tile_n, n_tiles=n_tiles)
+    rmin, rarg = pl.pallas_call(
+        kernel,
+        grid=(b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, k, tile_n), lambda i, t: (i, 0, t)),
+            pl.BlockSpec((1, k, tile_n), lambda i, t: (i, 0, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k, 1), jnp.float32),    # running row minima
+            pltpu.VMEM((k, 1), jnp.int32),      # running row argmins
+        ],
+        interpret=interpret,
+    )(log_s, log_q)
+    return rmin, rarg
+
+
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
 def gls_race(log_s: jax.Array, log_p: jax.Array, log_q: jax.Array,
              active: jax.Array, *, tile_n: int = DEFAULT_TILE_N,

@@ -1,11 +1,11 @@
-"""jit'd public wrapper for the GLS race kernel with a jnp fallback."""
+"""jit'd public wrappers for the GLS race kernels with jnp fallbacks."""
 
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.gls_race.kernel import gls_race
-from repro.kernels.gls_race.ref import gls_race_ref
+from repro.kernels.gls_race.kernel import gls_race, gls_row_race
+from repro.kernels.gls_race.ref import gls_race_ref, gls_row_race_ref
 
 
 def gls_race_op(log_s, log_p, log_q, active, *, use_kernel: bool = True,
@@ -13,3 +13,10 @@ def gls_race_op(log_s, log_p, log_q, active, *, use_kernel: bool = True,
     if use_kernel:
         return gls_race(log_s, log_p, log_q, active, interpret=interpret)
     return jax.jit(gls_race_ref)(log_s, log_p, log_q, active)
+
+
+def gls_row_race_op(log_s, log_q, *, use_kernel: bool = True,
+                    interpret: bool = True):
+    if use_kernel:
+        return gls_row_race(log_s, log_q, interpret=interpret)
+    return jax.jit(gls_row_race_ref)(log_s, log_q)

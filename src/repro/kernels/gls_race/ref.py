@@ -17,6 +17,15 @@ import jax
 import jax.numpy as jnp
 
 
+def gls_row_race_ref(log_s: jax.Array, log_q: jax.Array):
+    """Per-row race statistics: (rmin (B, K) f32, rarg (B, K) i32) of
+    score = log_s - log_q with -inf log-probs masked to +inf."""
+    score = log_s - log_q
+    score = jnp.where(jnp.isfinite(log_q), score, jnp.inf)
+    return (jnp.min(score, axis=-1),
+            jnp.argmin(score, axis=-1).astype(jnp.int32))
+
+
 def gls_race_ref(log_s: jax.Array, log_p: jax.Array, log_q: jax.Array,
                  active: jax.Array):
     """log_s/log_p/log_q: (B, K, N) f32; active: (B, K) bool.

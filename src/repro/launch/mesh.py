@@ -1,22 +1,34 @@
 """Production mesh builders.
 
 A FUNCTION, not a module-level constant, so importing this module never
-touches jax device state (per the dry-run contract)."""
+touches jax device state (per the dry-run contract).
+
+``compat_make_mesh`` papers over the jax.sharding.AxisType API (added in
+newer JAX): on versions without it, ``axis_types`` is simply omitted —
+meshes default to Auto axes there, so semantics are unchanged.
+"""
 
 from __future__ import annotations
 
 import jax
 
 
+def compat_make_mesh(shape: tuple, axes: tuple):
+    """jax.make_mesh with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; (2,16,16) = 512 chips across 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for CPU smoke runs (tests/examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))

@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--backend", default="xla",
+                    choices=("legacy", "xla", "pallas"),
+                    help="block-verification backend (pallas routes the "
+                         "K-way race through the gls_race kernel)")
     args = ap.parse_args()
 
     import sys, os
@@ -41,12 +45,15 @@ def main():
         target, [drafter],
         SpecDecConfig(num_drafts=k, draft_len=args.draft_len,
                       strategy=args.strategy, top_k=50,
-                      max_new_tokens=args.max_new))
+                      max_new_tokens=args.max_new,
+                      verifier_backend=args.backend))
     prompts = bench_prompts(args.requests)
     results = eng.serve(jax.random.PRNGKey(0), prompts)
     be = float(np.mean([r.block_efficiency for r in results]))
+    syncs = sum(r.host_syncs for r in results)
     print(f"strategy={args.strategy} K={k} L={args.draft_len} "
-          f"BE={be:.2f} over {len(prompts)} requests")
+          f"backend={args.backend} BE={be:.2f} "
+          f"verify-syncs={syncs} over {len(prompts)} requests")
 
 
 if __name__ == "__main__":

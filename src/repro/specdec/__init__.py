@@ -1,6 +1,17 @@
 """Multi-draft speculative decoding (the paper's Sec. 4 application)."""
 
+from repro.specdec.block_verify import (
+    BACKENDS,
+    BlockVerifyResult,
+    HostBlockResult,
+    RACE_STRATEGIES,
+    RS_STRATEGIES,
+    block_verify,
+    legacy_block_verify,
+    run_block_verify,
+)
 from repro.specdec.engine import (
+    BlockOutcome,
     GenerationStats,
     SpecDecConfig,
     SpecDecEngine,
@@ -22,19 +33,28 @@ from repro.specdec.verify import (
 )
 
 __all__ = [
+    "BACKENDS",
+    "BlockOutcome",
+    "BlockVerifyResult",
     "CachedSpecDecEngine",
     "GenerationStats",
+    "HostBlockResult",
+    "RACE_STRATEGIES",
+    "RS_STRATEGIES",
     "SpecDecServer",
     "SpecDecConfig",
     "SpecDecEngine",
     "StepResult",
     "autoregressive_reference",
+    "block_verify",
     "daliri_verify",
     "draft_token_from_uniforms",
     "gls_verify",
     "gls_verify_strong",
     "gumbel_race_argmin",
+    "legacy_block_verify",
     "probs_from_logits",
+    "run_block_verify",
     "single_draft_verify",
     "specinfer_verify",
     "spectr_verify",

@@ -1,0 +1,325 @@
+"""Fused device-side block verification (paper Sec. 4, Algorithm 2).
+
+The legacy engines verified one token at a time from a host Python loop,
+paying two device->host syncs per step (``int(res.token)`` /
+``bool(res.accepted)``).  This module runs the ENTIRE L-step verification
+loop of Algorithm 2 as one jitted device program:
+
+  * strategy dispatch is lifted to trace time (the strategy string is a
+    static argument — each strategy traces its own scan body);
+  * early exit is replaced by masked ``alive`` propagation: every step
+    computes its candidate token, but carry updates are frozen once a
+    rejection has occurred, so emitted positions past the rejection are
+    dead lanes, not control flow;
+  * the result is ``(tokens (L+1,), num_accepted, bonus, active)`` —
+    exactly ``num_accepted + 1`` leading tokens are valid (the residual
+    token on rejection, the bonus token Y_{L+1} on full acceptance) —
+    fetched with a single host transfer per block.
+
+Race-family strategies ("gls", "gls_strong", "daliri") share a key
+structural reduction: the (L+1, K, N) race table is FIXED for the block —
+only the (K,) active mask evolves — so the whole table collapses to
+per-row (min, argmin) statistics in ONE batched pass, and the sequential
+L-step loop runs on (L+1, K) scalars.  ``backend="pallas"`` routes that
+pass through the ``kernels/gls_race`` row-race kernel (batched as
+(B=L+1, K, N)); ``backend="xla"`` is the interpretable jnp fallback.
+Both produce bit-identical outputs (see tests/test_block_verify.py).
+
+Rejection-sampling strategies ("specinfer", "spectr", "single") run their
+per-step verifiers inside the same masked ``lax.scan``; they consume
+per-step RNG keys identical to the legacy loop's
+``jax.random.split(k_strat, L+1)`` stream, so outputs match bit-for-bit.
+
+``legacy_block_verify`` preserves the pre-refactor host loop verbatim as
+the equivalence oracle (and as ``verifier_backend="legacy"`` in the
+engines, for host-sync-count comparisons).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gls_race.kernel import gls_row_race
+from repro.specdec import verify as V
+
+_TINY = 1e-30
+
+BACKENDS = ("legacy", "xla", "pallas")
+RACE_STRATEGIES = ("gls", "gls_strong", "daliri")
+# Rejection-sampling strategies: their verifiers consume the drafter's
+# step distributions (the race family is drafter-invariant and never
+# needs them).
+RS_STRATEGIES = ("specinfer", "spectr", "single")
+
+
+class BlockVerifyResult(NamedTuple):
+    tokens: jax.Array        # (L+1,) i32; tokens[:num_accepted+1] valid
+    num_accepted: jax.Array  # () i32 — accepted DRAFT tokens this block
+    bonus: jax.Array         # () bool — all L accepted, tokens[L] is Y_{L+1}
+    active: jax.Array        # (K,) bool — final active mask (loop-exit state)
+
+
+class HostBlockResult(NamedTuple):
+    """Host-side unpacked block outcome (what the engines consume)."""
+    new_tokens: list         # python ints, length num_accepted + 1
+    num_accepted: int
+    active: np.ndarray       # (K,) bool
+    host_syncs: int          # device->host transfers spent on verification
+
+
+# ---------------------------------------------------------------------------
+# Race-family core (gls / gls_strong / daliri)
+# ---------------------------------------------------------------------------
+
+
+def _race_row_stats(log_u: jax.Array, q_steps: jax.Array, backend: str,
+                    interpret: bool):
+    """Row statistics of the block race table.
+
+    log_u/q_steps: (L+1, K, N).  Returns (rmin, rarg), each (L+1, K):
+    the minimum race time ``log(-log U) - log q`` over the vocab and its
+    argmin, per (step, draft) row.  The xla and pallas paths compute the
+    same score floats (same masking convention), so their outputs are
+    bit-identical.
+    """
+    log_s = jnp.log(-log_u)
+    if backend == "pallas":
+        log_q = jnp.where(q_steps > 0,
+                          jnp.log(jnp.maximum(q_steps, _TINY)),
+                          jnp.float32(-jnp.inf))
+        return gls_row_race(log_s, log_q, interpret=interpret)
+    score = log_s - jnp.log(jnp.maximum(q_steps, _TINY))
+    score = jnp.where(q_steps > 0, score, jnp.inf)
+    return jnp.min(score, axis=-1), jnp.argmin(score, axis=-1).astype(
+        jnp.int32)
+
+
+def _race_block(strategy: str, rmin: jax.Array, rarg: jax.Array,
+                draft_tokens: jax.Array, q_all: jax.Array,
+                strat_keys: Optional[jax.Array]) -> BlockVerifyResult:
+    """L-step scan over (L+1, K) row stats for the race strategies."""
+    l1, k = rmin.shape
+    l = l1 - 1
+    e0 = jnp.zeros((k,), bool).at[0].set(True)
+
+    def step(carry, inp):
+        active, alive, num_acc = carry
+        rmin_j, rarg_j, d_j = inp
+        if strategy == "gls":
+            mask = active
+        elif strategy == "gls_strong":
+            mask = jnp.ones((k,), bool)
+        else:  # daliri: race along draft 0's path only
+            mask = e0
+        masked = jnp.where(mask, rmin_j, jnp.inf)
+        k_star = jnp.argmin(masked)
+        token = rarg_j[k_star]
+        if strategy == "daliri":
+            acc = token == d_j[0]
+            new_active = e0
+        else:
+            new_active = active & (d_j == token)
+            acc = jnp.any(new_active)
+        take = alive & acc
+        active = jnp.where(take, new_active, active)
+        num_acc = num_acc + take.astype(jnp.int32)
+        return (active, alive & acc, num_acc), token
+
+    carry0 = (jnp.ones((k,), bool), jnp.bool_(True), jnp.int32(0))
+    (active, alive, num_acc), step_tokens = jax.lax.scan(
+        step, carry0, (rmin[:l], rarg[:l], draft_tokens.T))
+
+    # Bonus token Y_{L+1} (only meaningful when all L steps accepted).
+    if strategy in ("gls", "gls_strong"):
+        act_b = active if strategy == "gls" else jnp.ones((k,), bool)
+        masked = jnp.where(act_b, rmin[l], jnp.inf)
+        bonus_tok = rarg[l, jnp.argmin(masked)]
+    else:  # daliri: legacy falls through to the categorical bonus branch
+        k_idx = jnp.argmax(active)
+        bonus_tok = jax.random.categorical(
+            strat_keys[l],
+            jnp.log(jnp.maximum(q_all[k_idx, l], 1e-30))).astype(jnp.int32)
+
+    tokens = jnp.concatenate([step_tokens, bonus_tok[None]])
+    return BlockVerifyResult(tokens=tokens, num_accepted=num_acc,
+                             bonus=alive, active=active)
+
+
+# ---------------------------------------------------------------------------
+# Rejection-sampling core (specinfer / spectr / single)
+# ---------------------------------------------------------------------------
+
+
+def _rs_block(strategy: str, draft_tokens: jax.Array,
+              draft_probs: jax.Array, q_all: jax.Array,
+              strat_keys: jax.Array) -> BlockVerifyResult:
+    k, l = draft_tokens.shape
+    e0 = jnp.zeros((k,), bool).at[0].set(True)
+    p_steps = jnp.swapaxes(draft_probs, 0, 1)     # (L, K, N)
+    q_steps = jnp.swapaxes(q_all, 0, 1)           # (L+1, K, N)
+
+    def step(carry, inp):
+        active, alive, num_acc = carry
+        d_j, p_j, q_j, key_j = inp
+        if strategy == "specinfer":
+            res = V.specinfer_verify(key_j, p_j, d_j, q_j, active)
+            new_active = res.new_active
+        elif strategy == "spectr":
+            res = V.spectr_verify(key_j, p_j, d_j, q_j, active)
+            new_active = res.new_active
+        else:  # single (Leviathan): draft 0 only, path continues on row 0
+            res = V.single_draft_verify(key_j, p_j[0], d_j[0], q_j[0])
+            new_active = e0
+        take = alive & res.accepted
+        active = jnp.where(take, new_active, active)
+        num_acc = num_acc + take.astype(jnp.int32)
+        return (active, alive & res.accepted, num_acc), res.token
+
+    carry0 = (jnp.ones((k,), bool), jnp.bool_(True), jnp.int32(0))
+    (active, alive, num_acc), step_tokens = jax.lax.scan(
+        step, carry0,
+        (draft_tokens.T, p_steps, q_steps[:l], strat_keys[:l]))
+
+    k_idx = jnp.argmax(active)
+    bonus_tok = jax.random.categorical(
+        strat_keys[l],
+        jnp.log(jnp.maximum(q_all[k_idx, l], 1e-30))).astype(jnp.int32)
+    tokens = jnp.concatenate([step_tokens, bonus_tok[None]])
+    return BlockVerifyResult(tokens=tokens, num_accepted=num_acc,
+                             bonus=alive, active=active)
+
+
+# ---------------------------------------------------------------------------
+# Public fused entry point
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("strategy", "backend", "interpret"))
+def block_verify(log_u: jax.Array, draft_tokens: jax.Array,
+                 draft_probs: Optional[jax.Array], q_all: jax.Array,
+                 strat_keys: Optional[jax.Array], *, strategy: str = "gls",
+                 backend: str = "xla",
+                 interpret: bool = True) -> BlockVerifyResult:
+    """One jitted call verifying a whole speculative block.
+
+    log_u:        (L+1, K, N) shared log-uniforms (common random numbers).
+    draft_tokens: (K, L) i32 sampled draft continuations.
+    draft_probs:  (K, L, N) drafter step distributions (None for the race
+                  strategies, which are drafter-invariant by construction).
+    q_all:        (K, L+1, N) target distributions along each draft path.
+    strat_keys:   (L+1,) PRNG keys — the legacy ``split(k_strat, L+1)``
+                  stream (None allowed for gls/gls_strong).
+    strategy:     one of the six verification strategies (static).
+    backend:      "xla" | "pallas" (static); "pallas" routes the K-way
+                  race through the gls_race row kernel.
+    """
+    if strategy in RACE_STRATEGIES:
+        q_steps = jnp.swapaxes(q_all, 0, 1)       # (L+1, K, N)
+        rmin, rarg = _race_row_stats(log_u, q_steps, backend, interpret)
+        return _race_block(strategy, rmin, rarg, draft_tokens, q_all,
+                           strat_keys)
+    if strategy in RS_STRATEGIES:
+        return _rs_block(strategy, draft_tokens, draft_probs, q_all,
+                         strat_keys)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Legacy host-loop verifier (the pre-refactor engine code, kept verbatim
+# as the equivalence oracle and for host-sync-count comparisons)
+# ---------------------------------------------------------------------------
+
+
+def legacy_block_verify(log_u, draft_tokens, draft_probs, q_all, strat_keys,
+                        *, strategy: str) -> HostBlockResult:
+    """Per-token host loop with two device syncs per step."""
+    k, l = np.asarray(draft_tokens).shape
+    n = q_all.shape[-1]
+    out_tokens = []
+    active = jnp.ones((k,), bool)
+    accepted_drafts = 0
+    syncs = 0
+    for j in range(l):
+        q_j = jnp.asarray(q_all[:, j])
+        d_j = jnp.asarray(draft_tokens[:, j])
+        if strategy == "gls":
+            res = V.gls_verify(log_u[j], d_j, q_j, active)
+        elif strategy == "gls_strong":
+            res = V.gls_verify_strong(log_u[j], d_j, q_j, active)
+        elif strategy == "specinfer":
+            res = V.specinfer_verify(strat_keys[j],
+                                     jnp.asarray(draft_probs[:, j]),
+                                     d_j, q_j, active)
+        elif strategy == "spectr":
+            res = V.spectr_verify(strat_keys[j],
+                                  jnp.asarray(draft_probs[:, j]),
+                                  d_j, q_j, active)
+        elif strategy == "single":
+            res = V.single_draft_verify(strat_keys[j],
+                                        jnp.asarray(draft_probs[0, j]),
+                                        d_j[0], q_j[0])
+        elif strategy == "daliri":
+            res = V.daliri_verify(log_u[j, 0], d_j[0], q_j[0])
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+        out_tokens.append(int(res.token))
+        syncs += 1
+        if not bool(res.accepted):
+            syncs += 1
+            return HostBlockResult(new_tokens=out_tokens,
+                                   num_accepted=accepted_drafts,
+                                   active=np.asarray(active),
+                                   host_syncs=syncs)
+        syncs += 1
+        accepted_drafts += 1
+        active = res.new_active
+        if strategy in ("single", "daliri"):
+            # Single-draft: continue only along draft 0's path.
+            active = jnp.zeros((k,), bool).at[0].set(True)
+
+    # All L draft tokens accepted: emit the bonus token Y_{L+1}.
+    q_last = jnp.asarray(q_all[:, l])
+    if strategy in ("gls", "gls_strong"):
+        act = active if strategy == "gls" else jnp.ones((k,), bool)
+        score = jnp.log(-log_u[l]) - jnp.log(jnp.maximum(q_last, 1e-30))
+        score = jnp.where(q_last > 0, score, jnp.inf)
+        score = jnp.where(act[:, None], score, jnp.inf)
+        bonus = int(jnp.argmin(score) % n)
+    else:
+        k_idx = int(jnp.argmax(active))
+        bonus = int(jax.random.categorical(
+            strat_keys[l], jnp.log(jnp.maximum(q_last[k_idx], 1e-30))))
+        syncs += 1
+    syncs += 1
+    out_tokens.append(bonus)
+    return HostBlockResult(new_tokens=out_tokens,
+                           num_accepted=accepted_drafts,
+                           active=np.asarray(active), host_syncs=syncs)
+
+
+def run_block_verify(log_u, draft_tokens, draft_probs, q_all, strat_keys, *,
+                     strategy: str, backend: str = "xla",
+                     interpret: bool = True) -> HostBlockResult:
+    """Backend dispatcher shared by both engines: runs the block verifier
+    and unpacks to host.  The fused backends spend exactly ONE host
+    transfer per block; "legacy" replays the per-token host loop."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown verifier backend {backend!r}")
+    if backend == "legacy":
+        return legacy_block_verify(log_u, draft_tokens, draft_probs, q_all,
+                                   strat_keys, strategy=strategy)
+    res = block_verify(log_u, jnp.asarray(draft_tokens), draft_probs, q_all,
+                       strat_keys, strategy=strategy, backend=backend,
+                       interpret=interpret)
+    tokens, num_acc, active = jax.device_get(
+        (res.tokens, res.num_accepted, res.active))
+    a = int(num_acc)
+    return HostBlockResult(new_tokens=[int(t) for t in tokens[:a + 1]],
+                           num_accepted=a, active=np.asarray(active),
+                           host_syncs=1)

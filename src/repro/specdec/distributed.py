@@ -20,6 +20,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.6 top-level API
+    _shard_map = jax.shard_map
+except AttributeError:  # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 _TINY = 1e-30
 
 
@@ -65,7 +70,7 @@ def make_sharded_gls_verify(mesh, vocab_axis: str = "model"):
         return darg_g, targ_g
 
     spec_in = P(None, vocab_axis)
-    fn = jax.shard_map(
+    fn = _shard_map(
         kernel, mesh=mesh,
         in_specs=(spec_in, spec_in, P(None)),
         out_specs=(P(None), P()))

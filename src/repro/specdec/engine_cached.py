@@ -7,7 +7,8 @@ multi-token ``verify_step`` (§Perf B2):
 
   per block:  drafter: K decode_steps x L (drafts ride the batch dim)
               target:  ONE verify_step over (pending token + L drafts)
-              GLS verification on shared uniforms (Alg. 2)
+              fused block verification on shared uniforms (Alg. 2,
+              block_verify.py — same dispatcher as the reference engine)
               cache rollback = replicate a surviving draft's rows
 
 Cache rollback correctness: row k* survived steps 1..a, so its cache
@@ -15,6 +16,7 @@ slots [pos, pos+a] hold exactly [pending, Y_1..Y_a]; replicating row k*
 into all rows and rewinding pos to pos+a+1 leaves every row's cache equal
 to the accepted prefix.  The bonus/residual token Y_{a+1} becomes the
 next block's pending token (its KV enters the cache when scored).
+Single-draft strategies always continue along row 0, so k* = 0 there.
 """
 
 from __future__ import annotations
@@ -26,10 +28,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decode_step, init_cache, prefill
-from repro.models.config import ModelConfig
 from repro.models.transformer import verify_step
 from repro.specdec import verify as V
-from repro.specdec.engine import GenerationStats, SpecDecConfig, probs_from_logits
+from repro.specdec.block_verify import RS_STRATEGIES, run_block_verify
+from repro.specdec.engine import (
+    GenerationStats,
+    SpecDecConfig,
+    probs_from_logits,
+)
 
 
 def _tree_select_row(cache, k_star: int, num_rows: int):
@@ -46,18 +52,16 @@ def _tree_select_row(cache, k_star: int, num_rows: int):
 
 
 class CachedSpecDecEngine:
-    """GLS multi-draft speculative decoding with persistent KV caches.
-    Dense-family target and drafter (the paper-scale pair)."""
+    """Multi-draft speculative decoding with persistent KV caches.
+    Dense-family target and drafter (the paper-scale pair); all six
+    verification strategies route through the shared block verifier."""
 
     def __init__(self, target: tuple, drafter: tuple, cfg: SpecDecConfig):
-        assert cfg.strategy in ("gls", "gls_strong"), \
-            "cached engine implements the paper's GLS verification"
         self.t_params, self.t_cfg = target
         self.d_params, self.d_cfg = drafter
         assert self.t_cfg.family == "dense" and self.d_cfg.family == "dense"
         self.cfg = cfg
         self.vocab = self.t_cfg.vocab_size
-        k = cfg.num_drafts
         self._d_step = jax.jit(
             lambda p, t, c: decode_step(p, self.d_cfg, t, c))
         self._t_verify = jax.jit(
@@ -75,6 +79,7 @@ class CachedSpecDecEngine:
         max_new = max_new or cfg.max_new_tokens
         prompt = np.asarray(prompt, np.int32)
         buf = len(prompt) + max_new + Lr + 2
+        need_probs = cfg.strategy in RS_STRATEGIES
 
         # Prefill both models with the prompt minus its last token (which
         # becomes the first pending token), replicated across K rows.
@@ -89,17 +94,20 @@ class CachedSpecDecEngine:
         pending = int(prompt[-1])
         blocks = 0
         accepted_total = 0
+        syncs = 0
         while len(out) < max_new:
             # Same key derivation as the reference engine so both engines
             # see identical shared uniforms (exact-match testable).
             key, sub = jax.random.split(key)
-            k_unif, _ = jax.random.split(sub)
+            k_unif, k_strat = jax.random.split(sub)
             log_u = jnp.log(jax.random.uniform(
                 k_unif, (Lr + 1, K, N),
                 minval=np.finfo(np.float32).tiny, maxval=1.0))
+            strat_keys = jax.random.split(k_strat, Lr + 1)
 
             # --- drafts: L decode steps, K rows advance independently ---
             d_tokens = np.zeros((K, Lr), np.int32)
+            prob_steps = []
             d_cache_blk = d_cache
             cur = jnp.full((K, 1), pending, jnp.int32)
             for j in range(Lr):
@@ -109,6 +117,9 @@ class CachedSpecDecEngine:
                 tok = V.draft_token_from_uniforms(log_u[j], p_all)
                 d_tokens[:, j] = np.asarray(tok)
                 cur = tok[:, None]
+                if need_probs:
+                    prob_steps.append(p_all)
+            d_probs = jnp.stack(prob_steps, axis=1) if need_probs else None
 
             # --- target: one verify chunk over [pending, drafts] ---
             chunk = np.concatenate(
@@ -117,35 +128,18 @@ class CachedSpecDecEngine:
                 self.t_params, jnp.asarray(chunk), t_cache)
             q_all = probs_from_logits(t_logits, cfg.target_temp, cfg.top_k, N)
 
-            # --- Algorithm 2 verification ---
-            active = jnp.ones((K,), bool)
-            new_tokens = []
-            a = 0
-            for j in range(Lr):
-                if cfg.strategy == "gls":
-                    res = V.gls_verify(log_u[j], jnp.asarray(d_tokens[:, j]),
-                                       q_all[:, j], active)
-                else:
-                    res = V.gls_verify_strong(
-                        log_u[j], jnp.asarray(d_tokens[:, j]),
-                        q_all[:, j], active)
-                new_tokens.append(int(res.token))
-                if not bool(res.accepted):
-                    break
-                a += 1
-                active = res.new_active
-            else:
-                # all L accepted: bonus token from the last distributions
-                act = active if cfg.strategy == "gls" else jnp.ones((K,), bool)
-                score = (jnp.log(-log_u[Lr])
-                         - jnp.log(jnp.maximum(q_all[:, Lr], 1e-30)))
-                score = jnp.where(q_all[:, Lr] > 0, score, jnp.inf)
-                score = jnp.where(act[:, None], score, jnp.inf)
-                new_tokens.append(int(jnp.argmin(score) % N))
+            # --- fused block verification (Algorithm 2) ---
+            hb = run_block_verify(
+                log_u, d_tokens, d_probs, q_all, strat_keys,
+                strategy=cfg.strategy, backend=cfg.verifier_backend,
+                interpret=cfg.pallas_interpret)
+            new_tokens = hb.new_tokens
+            a = hb.num_accepted
+            syncs += hb.host_syncs
 
             # --- cache rollback ---
             if a > 0:
-                k_star = int(jnp.argmax(active))
+                k_star = int(np.argmax(hb.active))
             else:
                 k_star = 0  # any row: slot[pos] (pending) is identical
             base_pos = int(t_cache["pos"])
@@ -169,4 +163,5 @@ class CachedSpecDecEngine:
             pending = new_tokens[-1]
             blocks += 1
         return GenerationStats(output=np.asarray(out[:max_new], np.int32),
-                               blocks=blocks, accepted_drafts=accepted_total)
+                               blocks=blocks, accepted_drafts=accepted_total,
+                               host_syncs=syncs)

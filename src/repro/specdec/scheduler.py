@@ -2,10 +2,25 @@
 
 A minimal continuous-batching-lite scheduler: requests join a queue, up
 to ``max_batch`` live requests advance one speculative block per round
-(each with its own RNG stream and engine state), finished requests leave
-and queued ones join at round boundaries.  Tracks the serving metrics a
-deployment would export: time-to-first-block, tokens/s, block efficiency,
-acceptance rate.
+(each with its own RNG stream), finished requests leave and queued ones
+join at round boundaries.  Tracks the serving metrics a deployment would
+export: time-to-first-block, tokens/s, block efficiency, acceptance
+rate, host-sync counts.
+
+Two execution modes share one policy (admission order, RNG derivation,
+buffer sizing), so their outputs are bit-identical:
+
+  * sequential (``batched=False``): one engine block per live request per
+    round — R target forwards per round;
+  * batched (``batched=True``): all live requests' draft buffers stack
+    into (R*K, T) model calls via ``SpecDecEngine.gen_blocks`` — ONE
+    target forward per round regardless of R.
+
+Buffer lengths grow monotonically to the largest live requirement, so a
+request's compiled shapes — and therefore its sampled tokens — never
+depend on which mode ran it (trailing-buffer content does not affect
+causal logits, but buffer LENGTH changes compiled reduction shapes, so
+it is pinned scheduler-side).
 """
 
 from __future__ import annotations
@@ -48,6 +63,9 @@ class ServerMetrics:
     completed: int = 0
     total_tokens: int = 0
     total_blocks: int = 0
+    rounds: int = 0
+    target_forwards: int = 0
+    host_syncs: int = 0
     wall_s: float = 0.0
 
     @property
@@ -62,12 +80,15 @@ class ServerMetrics:
 class SpecDecServer:
     """Round-robin block scheduler over a shared SpecDecEngine."""
 
-    def __init__(self, engine: SpecDecEngine, max_batch: int = 8):
+    def __init__(self, engine: SpecDecEngine, max_batch: int = 8,
+                 batched: bool = False):
         self.engine = engine
         self.max_batch = max_batch
+        self.batched = batched
         self.queue: deque = deque()
         self.live: list = []
         self._uid = 0
+        self._buf_len = 0
         self.metrics = ServerMetrics()
 
     def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
@@ -81,21 +102,37 @@ class SpecDecServer:
         while self.queue and len(self.live) < self.max_batch:
             self.live.append(self.queue.popleft())
 
+    def _required_buf(self, req: Request) -> int:
+        return len(req.prompt) + req.max_new + self.engine.cfg.draft_len + 2
+
     def step(self, key: jax.Array) -> list:
         """Advance every live request by one speculative block.  Returns
         requests that finished this round."""
         self._admit()
+        if not self.live:
+            return []
+        self._buf_len = max([self._buf_len]
+                            + [self._required_buf(r) for r in self.live])
+        subs = [jax.random.fold_in(key, r.uid * 1000 + r.blocks)
+                for r in self.live]
+        prefixes = [np.concatenate([r.prompt,
+                                    np.asarray(r.output, np.int32)])
+                    for r in self.live]
+        fw0 = self.engine.num_target_forwards
+        if self.batched:
+            outs = self.engine.gen_blocks(subs, prefixes, self._buf_len)
+        else:
+            outs = [self.engine.gen_block(sub, prefix, self._buf_len)
+                    for sub, prefix in zip(subs, prefixes)]
+        self.metrics.rounds += 1
+        self.metrics.target_forwards += self.engine.num_target_forwards - fw0
+
         finished = []
-        for i, req in enumerate(self.live):
-            sub = jax.random.fold_in(key, req.uid * 1000 + req.blocks)
-            prefix = np.concatenate([req.prompt,
-                                     np.asarray(req.output, np.int32)])
-            buf_len = len(req.prompt) + req.max_new + \
-                self.engine.cfg.draft_len + 2
-            new, acc = self.engine._gen_block(sub, prefix, buf_len)
-            req.output.extend(new)
+        for req, out in zip(self.live, outs):
+            req.output.extend(out.new_tokens)
             req.blocks += 1
-            req.accepted += acc
+            req.accepted += out.accepted
+            self.metrics.host_syncs += out.verify_syncs
             if req.t_first is None:
                 req.t_first = time.time()
             if req.done:

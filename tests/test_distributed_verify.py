@@ -4,6 +4,7 @@ the main process and on an 8-device mesh in a subprocess (device count
 is locked at first jax init, so the multi-device case needs its own
 process with XLA_FLAGS)."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -13,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.gls_race.ref import gls_race_ref
+from repro.launch.mesh import compat_make_mesh
 from repro.specdec.distributed import make_sharded_gls_verify
 
 
@@ -34,8 +36,7 @@ def _check(mesh):
 
 
 def test_sharded_verify_single_device():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((1,), ("model",))
     _check(mesh)
 
 
@@ -47,13 +48,15 @@ def test_sharded_verify_eight_devices_subprocess():
         sys.path.insert(0, "src")
         sys.path.insert(0, "tests")
         import jax
+        from repro.launch.mesh import compat_make_mesh
         from test_distributed_verify import _check
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_make_mesh((8,), ("model",))
         _check(mesh)
         print("SHARDED_OK")
     """)
+    env = {**os.environ, "PYTHONPATH": "src"}
+    env.pop("XLA_FLAGS", None)  # the script pins its own device count
     out = subprocess.run([sys.executable, "-c", script], cwd=".",
                          capture_output=True, text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env=env)
     assert "SHARDED_OK" in out.stdout, out.stderr[-2000:]

@@ -10,6 +10,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_config
+from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.sharding import cache_shardings, param_spec, params_shardings
 from repro.sharding.rules import cache_spec
@@ -18,8 +19,7 @@ from repro.sharding.rules import cache_spec
 def _mesh():
     # 1-device "production-shaped" mesh: axis semantics are exercised,
     # device count is whatever the host has.
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_host_mesh()
 
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
