@@ -7,10 +7,13 @@ Two comparisons the serving refactor is accountable for:
     "xla" (one jitted block) vs "pallas" (block race through the
     kernels/gls_race row kernel): tokens/s and verification host-sync
     counts on the same trained pair;
-  * scheduler paths — sequential (R target forwards per round) vs
-    batched (ONE (R*K, T) target forward per round): tokens/s, forwards
-    per round, and an output-equality check (the two paths must be
-    bit-identical).
+  * scheduler paths — sequential (R target forwards per round, full-
+    prefix re-score) vs batched (ONE (R*K, T) re-score forward per
+    round) vs kv (persistent KV caches in a multi-request slot pool —
+    one drafter decode sweep plus ONE stacked verify_step per round, no
+    re-prefill): tokens/s at R=4 live requests, forwards per round, and
+    output-equality checks (all paths must be bit-identical to the
+    sequential reference mode).
 
 ``collect()`` returns the JSON payload CI archives as BENCH_specdec.json.
 """
@@ -23,10 +26,16 @@ import numpy as np
 from benchmarks.bench_table1_iid_drafts import collect as table1_collect
 from benchmarks.common import emit
 from benchmarks.lm_pair import bench_prompts, get_pair
-from repro.specdec import SpecDecConfig, SpecDecEngine, SpecDecServer
+from repro.specdec import (
+    CachedSpecDecEngine,
+    SpecDecConfig,
+    SpecDecEngine,
+    SpecDecServer,
+)
 
 L = 4
 MAX_NEW = 32
+SCHED_BATCH = 4   # R: live requests per round in the scheduler bench
 
 
 def _bench_backends(*, k=8, max_new=MAX_NEW, n_prompts=3):
@@ -38,16 +47,33 @@ def _bench_backends(*, k=8, max_new=MAX_NEW, n_prompts=3):
     return rows
 
 
-def _bench_scheduler(target, drafter, *, n_requests=6, max_new=MAX_NEW):
+def _bench_scheduler(target, drafter, *, n_requests=8, max_new=MAX_NEW):
     corpus = bench_prompts(n_requests, length=12)
+    sd = SpecDecConfig(num_drafts=4, draft_len=L, strategy="gls",
+                       top_k=50, max_new_tokens=max_new)
     out = {}
     outputs = {}
-    for mode, batched in (("sequential", False), ("batched", True)):
-        eng = SpecDecEngine(
-            target, [drafter],
-            SpecDecConfig(num_drafts=4, draft_len=L, strategy="gls",
-                          top_k=50, max_new_tokens=max_new))
-        server = SpecDecServer(eng, max_batch=3, batched=batched)
+    for mode in ("sequential", "batched", "kv"):
+        if mode == "kv":
+            eng = CachedSpecDecEngine(target, drafter, sd,
+                                      pool_slots=SCHED_BATCH)
+        else:
+            eng = SpecDecEngine(target, [drafter], sd)
+
+        def make_server():
+            return SpecDecServer(eng, max_batch=SCHED_BATCH,
+                                 batched=mode == "batched",
+                                 cache_mode="kv" if mode == "kv"
+                                 else "reprefill")
+
+        # Warmup pass compiles this mode's forwards so the measured run
+        # reports steady-state tokens/s, not jit tracing time.
+        warm = make_server()
+        for p in corpus[:SCHED_BATCH]:
+            warm.submit(p, max_new=max_new)
+        warm.run(jax.random.PRNGKey(3))
+
+        server = make_server()
         for p in corpus:
             server.submit(p, max_new=max_new)
         done = server.run(jax.random.PRNGKey(7))
@@ -58,9 +84,16 @@ def _bench_scheduler(target, drafter, *, n_requests=6, max_new=MAX_NEW):
             "rounds": m.rounds,
             "target_forwards": m.target_forwards,
             "host_syncs": m.host_syncs,
+            "draft_syncs": m.draft_syncs,
         }
         outputs[mode] = {r.uid: list(r.output) for r in done}
-    out["bit_identical"] = outputs["sequential"] == outputs["batched"]
+    out["live_requests"] = SCHED_BATCH
+    out["bit_identical"] = {
+        mode: outputs["sequential"] == outputs[mode]
+        for mode in ("batched", "kv")}
+    out["kv_speedup_vs_reprefill"] = (
+        out["kv"]["tokens_per_s"] / max(out["sequential"]["tokens_per_s"],
+                                        1e-9))
     return out
 
 
@@ -95,7 +128,7 @@ def run(fast: bool = False):
              f"tok_s={r['tokens_per_s']:.1f};host_syncs={r['host_syncs']};"
              f"BE={r['block_efficiency']:.3f}")
     sched = payload["scheduler"]
-    for mode in ("sequential", "batched"):
+    for mode in ("sequential", "batched", "kv"):
         m = sched[mode]
         emit(f"scheduler_{mode}", 0.0,
              f"tok_s={m['tokens_per_s']:.1f};rounds={m['rounds']};"
@@ -103,6 +136,8 @@ def run(fast: bool = False):
              f"host_syncs={m['host_syncs']}")
     emit("scheduler_paths_bit_identical", 0.0,
          str(sched["bit_identical"]))
+    emit("scheduler_kv_speedup_vs_reprefill", 0.0,
+         f"{sched['kv_speedup_vs_reprefill']:.2f}x")
     return payload
 
 

@@ -2,11 +2,13 @@
 GLS speculative-decoding engine, with serving metrics (tokens/s, mean
 block efficiency, per-request latencies).
 
-Runs the same request trace through BOTH scheduler paths — sequential
-(one engine block per request per round) and batched (all live requests'
-draft buffers stacked into one (R*K, T) target forward per round) — and
-checks their outputs are bit-identical while reporting the tokens/s and
-target-forward-count deltas.
+Runs the same request trace through ALL THREE scheduler paths —
+sequential (one engine block per request per round), batched (all live
+requests' draft buffers stacked into one (R*K, T) target forward per
+round), and kv (persistent KV caches in a multi-request slot pool, no
+per-block re-prefill, DESIGN.md §7) — and checks their outputs are
+bit-identical while reporting the tokens/s and target-forward-count
+deltas.
 
 Run:  PYTHONPATH=src python examples/serve_scheduler.py [--requests 6]
 """
@@ -18,7 +20,12 @@ import numpy as np
 
 from repro.data import encode, lm_dataset, synthetic_corpus
 from repro.models import ModelConfig, init_params
-from repro.specdec import SpecDecConfig, SpecDecEngine, SpecDecServer
+from repro.specdec import (
+    CachedSpecDecEngine,
+    SpecDecConfig,
+    SpecDecEngine,
+    SpecDecServer,
+)
 from repro.train import TrainConfig, train
 
 VOCAB = 128
@@ -50,22 +57,28 @@ def main():
 
     corpus = encode(synthetic_corpus(60, seed=11)) % VOCAB
 
-    def serve(batched):
-        eng = SpecDecEngine((tp, TARGET), [(dp, DRAFTER)],
-                            SpecDecConfig(num_drafts=4, draft_len=3,
-                                          strategy="gls", top_k=50))
-        server = SpecDecServer(eng, max_batch=args.max_batch,
-                               batched=batched)
+    sd = SpecDecConfig(num_drafts=4, draft_len=3, strategy="gls", top_k=50)
+
+    def serve(mode):
+        if mode == "kv":
+            eng = CachedSpecDecEngine((tp, TARGET), (dp, DRAFTER), sd,
+                                      pool_slots=args.max_batch)
+            server = SpecDecServer(eng, max_batch=args.max_batch,
+                                   cache_mode="kv")
+        else:
+            eng = SpecDecEngine((tp, TARGET), [(dp, DRAFTER)], sd)
+            server = SpecDecServer(eng, max_batch=args.max_batch,
+                                   batched=mode == "batched")
         for i in range(args.requests):
             server.submit(corpus[i * 29:i * 29 + 12], max_new=args.max_new)
         done = server.run(jax.random.PRNGKey(7))
         return server, done
 
     outputs = {}
-    for mode, batched in (("sequential", False), ("batched", True)):
+    for mode in ("sequential", "batched", "kv"):
         print(f"\n== serving {args.requests} requests "
               f"(max_batch={args.max_batch}, mode={mode}) ==")
-        server, done = serve(batched)
+        server, done = serve(mode)
         for r in done:
             lat = (r.t_done - r.t_submit)
             print(f"req {r.uid}: {len(r.output)} tokens, "
@@ -77,10 +90,11 @@ def main():
               f"target-forwards: {m.target_forwards}")
         outputs[mode] = {r.uid: list(r.output) for r in done}
 
-    match = outputs["sequential"] == outputs["batched"]
-    print(f"\nbatched output == sequential output: {match}")
-    if not match:
-        raise SystemExit("scheduler paths diverged!")
+    for mode in ("batched", "kv"):
+        match = outputs["sequential"] == outputs[mode]
+        print(f"\n{mode} output == sequential output: {match}")
+        if not match:
+            raise SystemExit(f"scheduler paths diverged ({mode})!")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,14 @@
 """Serving launcher: GLS multi-draft speculative decoding over a
-target/drafter pair, with batched request handling.
+target/drafter pair, driven by the batched request scheduler.
 
   python -m repro.launch.serve --steps 120 --requests 4 \
-      --strategy gls --drafts 8
+      --strategy gls --drafts 8 --cache-mode kv
+
+``--cache-mode reprefill`` drives the reference engine (full-prefix
+re-score per block; add ``--batched`` to stack live requests into one
+target forward per round); ``--cache-mode kv`` serves from persistent
+KV caches in a multi-request slot pool (DESIGN.md §7) — same tokens,
+no re-prefill.
 
 Loads checkpoints if given, otherwise trains a small pair on the
 synthetic corpus first (CPU-scale demonstration of the full path)."""
@@ -26,34 +32,57 @@ def main():
                     help="training steps when no checkpoint given")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--backend", default="xla",
                     choices=("legacy", "xla", "pallas"),
                     help="block-verification backend (pallas routes the "
                          "K-way race through the gls_race kernel)")
+    ap.add_argument("--cache-mode", default="reprefill",
+                    choices=("reprefill", "kv"),
+                    help="reprefill: reference engine, full-prefix "
+                         "re-score; kv: persistent KV caches in a "
+                         "multi-request slot pool")
+    ap.add_argument("--batched", action="store_true",
+                    help="stack live requests into one target forward "
+                         "per round (reprefill mode; kv always batches)")
     args = ap.parse_args()
 
     import sys, os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__),
                                     "..", "..", ".."))
     from benchmarks.lm_pair import bench_prompts, get_pair
-    from repro.specdec import SpecDecConfig, SpecDecEngine
+    from repro.specdec import (
+        CachedSpecDecEngine,
+        SpecDecConfig,
+        SpecDecEngine,
+        SpecDecServer,
+    )
 
     target, drafter = get_pair(steps=args.steps, log=print)
     k = 1 if args.strategy in ("single", "daliri") else args.drafts
-    eng = SpecDecEngine(
-        target, [drafter],
-        SpecDecConfig(num_drafts=k, draft_len=args.draft_len,
-                      strategy=args.strategy, top_k=50,
-                      max_new_tokens=args.max_new,
-                      verifier_backend=args.backend))
-    prompts = bench_prompts(args.requests)
-    results = eng.serve(jax.random.PRNGKey(0), prompts)
-    be = float(np.mean([r.block_efficiency for r in results]))
-    syncs = sum(r.host_syncs for r in results)
+    cfg = SpecDecConfig(num_drafts=k, draft_len=args.draft_len,
+                        strategy=args.strategy, top_k=50,
+                        max_new_tokens=args.max_new,
+                        verifier_backend=args.backend)
+    if args.cache_mode == "kv":
+        eng = CachedSpecDecEngine(target, drafter, cfg,
+                                  pool_slots=args.max_batch)
+    else:
+        eng = SpecDecEngine(target, [drafter], cfg)
+    server = SpecDecServer(eng, max_batch=args.max_batch,
+                           batched=args.batched,
+                           cache_mode=args.cache_mode)
+    for p in bench_prompts(args.requests):
+        server.submit(p, max_new=args.max_new)
+    done = server.run(jax.random.PRNGKey(0))
+    m = server.metrics
+    be = float(np.mean([r.block_efficiency for r in done]))
     print(f"strategy={args.strategy} K={k} L={args.draft_len} "
-          f"backend={args.backend} BE={be:.2f} "
-          f"verify-syncs={syncs} over {len(prompts)} requests")
+          f"backend={args.backend} cache_mode={args.cache_mode} "
+          f"BE={be:.2f} tok/s={m.tokens_per_s:.1f} "
+          f"rounds={m.rounds} target-forwards={m.target_forwards} "
+          f"verify-syncs={m.host_syncs} over {len(done)} requests")
 
 
 if __name__ == "__main__":

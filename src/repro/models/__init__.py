@@ -1,5 +1,6 @@
 """Model substrate: six architecture families behind one API."""
 
+from repro.models.cache_pool import CachePool
 from repro.models.config import ModelConfig
 from repro.models.registry import (
     decode_step,
@@ -11,9 +12,14 @@ from repro.models.registry import (
     prefill,
 )
 
+from repro.models.transformer import decode_step_slots, verify_step_slots
+
 __all__ = [
+    "CachePool",
     "ModelConfig",
     "decode_step",
+    "decode_step_slots",
+    "verify_step_slots",
     "family_module",
     "forward",
     "init_cache",

@@ -1,0 +1,155 @@
+"""Slot-based KV-cache arena for multi-request cached serving.
+
+One pool holds the persistent decode state for up to ``num_slots`` live
+requests at once, for every model that participates in a serving step
+(speculative decoding needs two: target and drafter).  Each request owns
+one *slot* = ``rows_per_slot`` consecutive batch rows of a shared
+``(layers, num_slots * rows_per_slot, kv_heads, buf_len, head_dim)``
+cache — for spec-dec the rows are the K draft lanes.  All live requests
+then advance in ONE ``decode_step_slots`` / ``verify_step_slots`` call
+over the whole arena; free slots ride along as dead rows (their garbage
+is never attended by other rows and is fully overwritten at the next
+admission's prefill scatter).
+
+Lifecycle contract (DESIGN.md §7):
+
+  * ``alloc``/``release`` at request admission/completion; allocation is
+    lowest-free-slot first, so a given request trace maps to slots
+    deterministically;
+  * per-slot positions are tracked HOST-side (``pool.pos``) — reading a
+    position never costs a device sync, and the model-call API takes
+    positions as an argument instead of carrying them in the cache dict;
+  * per-slot rollback is row replication: after block verification the
+    surviving draft row's cache is broadcast across the slot's rows (one
+    arena-wide gather for all slots at once, ``rollback_rows``);
+  * ``ensure_buf`` grows every arena to a longer buffer (zero-padded on
+    the time axis) when a larger request is admitted; buffer length only
+    ever grows, mirroring the scheduler's monotone buffer policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.registry import init_cache
+
+
+@jax.jit
+def _gather_rows(leaf, idx):
+    return jnp.take(leaf, idx, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("r0",))
+def _scatter_rows(leaf, rows, r0: int):
+    return jax.lax.dynamic_update_slice_in_dim(leaf, rows, r0, axis=1)
+
+
+@jax.jit
+def _grow_time(new_leaf, old_leaf):
+    t_old = old_leaf.shape[3]
+    return jax.lax.dynamic_update_slice_in_dim(
+        new_leaf, old_leaf, 0, axis=3) if t_old else new_leaf
+
+
+class CachePool:
+    """Multi-model slot arena; see module docstring for the contract."""
+
+    def __init__(self, cfgs: Dict[str, ModelConfig], num_slots: int,
+                 rows_per_slot: int, buf_len: int):
+        assert num_slots >= 1 and rows_per_slot >= 1
+        for cfg in cfgs.values():
+            assert not cfg.sliding_window, \
+                "CachePool: non-ring (full-attention) caches only"
+        self.cfgs = dict(cfgs)
+        self.num_slots = num_slots
+        self.rows_per_slot = rows_per_slot
+        self.buf_len = buf_len
+        self.caches = {name: self._init_arena(cfg, buf_len)
+                       for name, cfg in self.cfgs.items()}
+        # Host-side per-slot decode position (== tokens whose KV is live).
+        self.pos = np.zeros(num_slots, np.int64)
+        self._free = list(range(num_slots))
+
+    def _init_arena(self, cfg: ModelConfig, buf_len: int) -> dict:
+        c = init_cache(cfg, self.num_slots * self.rows_per_slot, buf_len)
+        return {"k": c["k"], "v": c["v"]}   # positions live host-side
+
+    # -- slot lifecycle ----------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"CachePool: all {self.num_slots} slots in use")
+        slot = min(self._free)
+        self._free.remove(slot)
+        self.pos[slot] = 0
+        return slot
+
+    def release(self, slot: int) -> None:
+        assert 0 <= slot < self.num_slots and slot not in self._free
+        self.pos[slot] = 0
+        self._free.append(slot)
+
+    def rows_of(self, slot: int) -> np.ndarray:
+        r = self.rows_per_slot
+        return np.arange(slot * r, (slot + 1) * r)
+
+    # -- buffer growth -----------------------------------------------------
+    def ensure_buf(self, buf_len: int) -> None:
+        """Grow every arena's time axis to at least ``buf_len``.  Existing
+        KV content (all live positions) is preserved; new tail is zero."""
+        if buf_len <= self.buf_len:
+            return
+        for name, cfg in self.cfgs.items():
+            fresh = self._init_arena(cfg, buf_len)
+            old = self.caches[name]
+            self.caches[name] = {kk: _grow_time(fresh[kk], old[kk])
+                                 for kk in ("k", "v")}
+        self.buf_len = buf_len
+
+    # -- cache content ops -------------------------------------------------
+    def write_prefill(self, name: str, slot: int, cache: dict,
+                      pos: int) -> None:
+        """Install a freshly prefilled ``(layers, rows_per_slot, ...)``
+        cache into ``slot``'s rows of arena ``name``; ``pos`` is the
+        number of prefilled tokens.  The prefill cache must have been
+        built at the pool's current ``buf_len``."""
+        arena = self.caches[name]
+        assert cache["k"].shape[3] == self.buf_len, \
+            "prefill cache buffer != pool buffer"
+        r0 = slot * self.rows_per_slot
+        self.caches[name] = {kk: _scatter_rows(arena[kk], cache[kk], r0=r0)
+                             for kk in ("k", "v")}
+        self.pos[slot] = pos
+
+    def update(self, name: str, cache: dict) -> None:
+        """Adopt the arena returned by a slots model call."""
+        self.caches[name] = {"k": cache["k"], "v": cache["v"]}
+
+    def rollback_rows(self, row_src: np.ndarray) -> None:
+        """Arena-wide row replication: row i of every cache becomes row
+        ``row_src[i]``.  Callers build ``row_src`` so each rolled-back
+        slot's rows all point at its surviving row and every other row
+        points at itself."""
+        assert row_src.shape == (self.num_slots * self.rows_per_slot,)
+        idx = jnp.asarray(row_src, jnp.int32)
+        for name, arena in self.caches.items():
+            self.caches[name] = {kk: _gather_rows(arena[kk], idx)
+                                 for kk in ("k", "v")}
+
+    def row_positions(self, default: int = 0) -> np.ndarray:
+        """(num_slots * rows_per_slot,) per-row positions for the slots
+        model calls; free slots get ``default``."""
+        per_slot = self.pos.copy()
+        for s in self._free:
+            per_slot[s] = default
+        return np.repeat(per_slot, self.rows_per_slot).astype(np.int32)

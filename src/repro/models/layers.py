@@ -102,13 +102,17 @@ def attention(
     v: jax.Array,                # (B, Hkv, T, D)
     *,
     causal: bool = True,
-    q_offset=0,                  # position of q[0] within the KV timeline
+    q_offset=0,                  # position of q[0]; scalar or per-row (B,)
     window: int = 0,             # sliding window (0 = unbounded)
-    kv_len: Optional[jax.Array] = None,  # valid KV prefix length (decode)
+    kv_len: Optional[jax.Array] = None,  # valid KV prefix length (decode);
+                                         # scalar or per-row (B,)
 ) -> jax.Array:
     """GQA attention without materializing repeated KV heads.
 
     Small/medium sequence path; for long prefill use ``chunked_attention``.
+    Per-row ``q_offset`` / ``kv_len`` support cache arenas where each
+    batch row sits at its own decode position (DESIGN.md §7); the scalar
+    path computes the identical masked scores it always did.
     """
     b, h, s, d = q.shape
     hkv = k.shape[1]
@@ -116,16 +120,22 @@ def attention(
     q = q.reshape(b, hkv, g, s, d)
     scores = _gqa_scores(q, k) / jnp.sqrt(d).astype(jnp.float32)
     t = k.shape[2]
-    q_pos = q_offset + jnp.arange(s)
+    q_off = jnp.asarray(q_offset)
+    # Rows dim of the mask: 1 (shared mask, broadcast) or B (per-row).
+    q_pos = q_off.reshape(-1, 1) + jnp.arange(s)          # (1 or B, S)
     k_pos = jnp.arange(t)
-    mask = jnp.ones((s, t), bool)
-    if causal:
-        mask &= k_pos[None, :] <= q_pos[:, None]
-    if window:
-        mask &= k_pos[None, :] > q_pos[:, None] - window
+    rows = q_pos.shape[0]
     if kv_len is not None:
-        mask &= k_pos[None, :] < kv_len
-    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        kvl = jnp.asarray(kv_len).reshape(-1, 1, 1)       # (1 or B, 1, 1)
+        rows = max(rows, kvl.shape[0])
+    mask = jnp.ones((rows, s, t), bool)
+    if causal:
+        mask &= k_pos[None, None, :] <= q_pos[:, :, None]
+    if window:
+        mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+    if kv_len is not None:
+        mask &= k_pos[None, None, :] < kvl
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     # Rows that are fully masked produce NaN; zero them (can't happen for
     # causal q_offset>=0 but can for padded decode batches).

@@ -203,6 +203,54 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict):
     return logits, {"k": new_cache["k"], "v": new_cache["v"], "pos": pos + 1}
 
 
+def _rowwise_cache_write(cache_k, cache_v, k, v, starts):
+    """Write each row's (H, m, hd) keys/values at its own time offset.
+    cache_k/v: (B, H, T, hd); k/v: (B, H, m, hd); starts: (B,) i32."""
+    upd = lambda c, kk, p: jax.lax.dynamic_update_slice_in_dim(
+        c, kk, p, axis=1)
+    return (jax.vmap(upd)(cache_k, k, starts),
+            jax.vmap(upd)(cache_v, v, starts))
+
+
+def _block_decode_slots(params_l, carry, cache_l, cfg: ModelConfig):
+    """Single-token decode where every batch row sits at its own position
+    (cache-arena serving: rows = slots x drafts, DESIGN.md §7)."""
+    x, pos = carry  # x: (B, 1, D); pos: (B,) per-row current position
+    from repro.sharding.context import constrain
+    x = constrain(x, "layer_carry")
+    p = params_l["attn"]
+    hd = cfg.resolved_head_dim
+    xin = L.rmsnorm(params_l["attn_norm"], x, cfg.norm_eps)
+    q, k, v = L.project_qkv(p, xin, cfg.num_heads, cfg.kv_heads, hd)
+    posb = pos[:, None, None]                        # (B, 1, 1)
+    q = L.apply_rope(q, posb, cfg.rope_theta)
+    k = L.apply_rope(k, posb, cfg.rope_theta)
+    t_cache = cache_l["k"].shape[2]
+    new_k, new_v = _rowwise_cache_write(cache_l["k"], cache_l["v"], k, v,
+                                        pos % t_cache)
+    kv_len = jnp.minimum(pos + 1, t_cache)
+    out = L.attention(q, new_k, new_v, causal=False, kv_len=kv_len)
+    x = x + L.project_out(p, out)
+    x = x + L.swiglu(params_l["mlp"],
+                     L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
+    return (x, pos), {"k": new_k, "v": new_v}
+
+
+def decode_step_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                      cache: dict, pos: jax.Array):
+    """Per-row-position decode: tokens (B, 1), pos (B,) -> (logits
+    (B, Vpad), new {k, v} cache).  Position tracking lives with the
+    caller (host-side in the cache pool), not in the cache dict."""
+    x = params["embed"][tokens]
+    fn = functools.partial(_block_decode_slots, cfg=cfg)
+    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
+                                    cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"k": new_cache["k"], "v": new_cache["v"]}
+
+
 def _block_verify(params_l, carry, cache_l, cfg: ModelConfig):
     """Multi-token decode ("verify chunk"): process m draft tokens against
     the cache in one pass — the serving step for multi-draft speculative
@@ -244,3 +292,43 @@ def verify_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     logits = x @ params["lm_head"]
     return logits, {"k": new_cache["k"], "v": new_cache["v"],
                     "pos": pos + tokens.shape[1]}
+
+
+def _block_verify_slots(params_l, carry, cache_l, cfg: ModelConfig):
+    """Multi-token verify chunk with per-row start positions (the batched
+    cache-arena step: rows of different requests verify their own drafts
+    at their own offsets in one forward, DESIGN.md §7)."""
+    x, pos = carry  # x: (B, m, D); pos: (B,) per-row start position
+    p = params_l["attn"]
+    hd = cfg.resolved_head_dim
+    b, m, _ = x.shape
+    xin = L.rmsnorm(params_l["attn_norm"], x, cfg.norm_eps)
+    q, k, v = L.project_qkv(p, xin, cfg.num_heads, cfg.kv_heads, hd)
+    positions = pos[:, None, None] + jnp.arange(m, dtype=jnp.int32)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    new_k, new_v = _rowwise_cache_write(cache_l["k"], cache_l["v"], k, v,
+                                        pos)
+    out = L.attention(q, new_k, new_v, causal=True, q_offset=pos,
+                      kv_len=pos + m)
+    x = x + L.project_out(p, out)
+    x = x + L.swiglu(params_l["mlp"],
+                     L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
+    return (x, pos), {"k": new_k, "v": new_v}
+
+
+def verify_step_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                      cache: dict, pos: jax.Array):
+    """Per-row-position verify chunk: tokens (B, m), pos (B,) -> (logits
+    (B, m, Vpad), new {k, v} cache).  Row b's logits[:, j] are
+    q(. | row-b cache prefix, tokens[b, :j+1]) — the Algorithm-2 target
+    rows for a whole cache arena in ONE forward.  Non-ring caches only."""
+    assert not cfg.sliding_window, "verify_step_slots: non-ring caches only"
+    x = params["embed"][tokens]
+    fn = functools.partial(_block_verify_slots, cfg=cfg)
+    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
+                                    cache=layer_cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, {"k": new_cache["k"], "v": new_cache["v"]}

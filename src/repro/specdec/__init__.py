@@ -11,6 +11,7 @@ from repro.specdec.block_verify import (
     run_block_verify,
 )
 from repro.specdec.engine import (
+    STRATEGIES,
     BlockOutcome,
     GenerationStats,
     SpecDecConfig,
@@ -41,6 +42,7 @@ __all__ = [
     "HostBlockResult",
     "RACE_STRATEGIES",
     "RS_STRATEGIES",
+    "STRATEGIES",
     "SpecDecServer",
     "SpecDecConfig",
     "SpecDecEngine",

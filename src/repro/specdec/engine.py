@@ -112,6 +112,18 @@ def probs_from_logits(logits: jax.Array, temp: float, top_k: int,
     return jax.nn.softmax(logits, axis=-1)
 
 
+def block_randomness(sub: jax.Array, draft_len: int, num_drafts: int,
+                     vocab: int):
+    """Shared log-uniforms + strategy key stream for one block: the RNG
+    contract (DESIGN.md §3.2) every engine path must follow for the
+    coupling — and the cross-engine exact-match tests — to hold."""
+    k_unif, k_strat = jax.random.split(sub)
+    log_u = jnp.log(jax.random.uniform(
+        k_unif, (draft_len + 1, num_drafts, vocab),
+        minval=np.finfo(np.float32).tiny, maxval=1.0))
+    return log_u, jax.random.split(k_strat, draft_len + 1)
+
+
 class SpecDecEngine:
     """Speculative decoding over one target and K (possibly distinct)
     drafters sharing the target's vocabulary."""
@@ -132,6 +144,9 @@ class SpecDecEngine:
         # Serving instrumentation (read by the scheduler / benchmarks).
         self.num_target_forwards = 0
         self.num_draft_forwards = 0
+        # Device->host transfers spent materializing draft tokens (one
+        # per draft step per block/round; DESIGN.md §7.3 accounting).
+        self.num_draft_syncs = 0
 
     # -- jitted, shape-stable model calls ---------------------------------
     def _buffer_forward(self, params, mcfg: ModelConfig, tokens: jax.Array):
@@ -144,15 +159,8 @@ class SpecDecEngine:
 
     # -- shared drafting / scoring core (R requests stacked) ---------------
     def _block_randomness(self, sub: jax.Array):
-        """Shared log-uniforms + strategy key stream for one block.  The
-        derivation is the contract every engine path must follow for the
-        coupling (and cross-engine exact-match tests) to hold."""
-        cfg = self.cfg
-        k_unif, k_strat = jax.random.split(sub)
-        log_u = jnp.log(jax.random.uniform(
-            k_unif, (cfg.draft_len + 1, cfg.num_drafts, self.vocab),
-            minval=np.finfo(np.float32).tiny, maxval=1.0))
-        return log_u, jax.random.split(k_strat, cfg.draft_len + 1)
+        return block_randomness(sub, self.cfg.draft_len,
+                                self.cfg.num_drafts, self.vocab)
 
     def _draft_block(self, log_u_all: jax.Array, bufs: np.ndarray,
                      p0s: np.ndarray):
@@ -194,7 +202,8 @@ class SpecDecEngine:
                 p_all = jnp.stack(cols, axis=1).reshape(r_n * k_n, n)
             toks = V.draft_token_from_uniforms(
                 log_u_all[:, j].reshape(r_n * k_n, n), p_all)
-            tk = np.asarray(toks).reshape(r_n, k_n)
+            tk = np.asarray(toks).reshape(r_n, k_n)  # 1 transfer / step
+            self.num_draft_syncs += 1
             d_tokens[:, :, j] = tk
             for r in range(r_n):
                 bufs[r, rows, p0s[r] + j] = tk[r]

@@ -2,166 +2,377 @@
 
 The reference engine (engine.py) re-scores the full prefix each block —
 simple and family-agnostic but O(T^2) per sequence.  This engine keeps
-persistent KV caches for target and drafter and advances with the
-multi-token ``verify_step`` (§Perf B2):
+persistent KV caches for target and drafter in a slot-based cache arena
+(``models/cache_pool.py``) and advances ALL live requests at once with
+the slot-aware multi-token ``verify_step_slots`` (DESIGN.md §7):
 
-  per block:  drafter: K decode_steps x L (drafts ride the batch dim)
-              target:  ONE verify_step over (pending token + L drafts)
-              fused block verification on shared uniforms (Alg. 2,
-              block_verify.py — same dispatcher as the reference engine)
-              cache rollback = replicate a surviving draft's rows
+  per round: drafter: L ``decode_step_slots`` sweeps over the whole
+             arena (drafts x slots ride the batch dim)
+             target:  ONE ``verify_step_slots`` over every live
+             request's (pending token + L drafts)
+             fused block verification on shared uniforms (Alg. 2,
+             block_verify.py — same dispatcher as the reference engine)
+             cache rollback = arena-wide surviving-row replication
 
 Cache rollback correctness: row k* survived steps 1..a, so its cache
 slots [pos, pos+a] hold exactly [pending, Y_1..Y_a]; replicating row k*
-into all rows and rewinding pos to pos+a+1 leaves every row's cache equal
-to the accepted prefix.  The bonus/residual token Y_{a+1} becomes the
-next block's pending token (its KV enters the cache when scored).
-Single-draft strategies always continue along row 0, so k* = 0 there.
+into all of the slot's rows and rewinding pos to pos+a+1 leaves every
+row's cache equal to the accepted prefix.  The bonus/residual token
+Y_{a+1} becomes the next block's pending token (its KV enters the cache
+when scored).  Row selection contract: when a == 0 every row's slot[pos]
+(the shared pending token) is identical, so row 0 is valid; when a > 0
+at least one row MUST be active (``_select_rollback_row`` asserts this
+invariant instead of letting ``argmax`` silently pick a dead row 0).
+
+Host-sync accounting (DESIGN.md §7.3): ``GenerationStats.host_syncs``
+counts every device->host transfer the verification path performs.  The
+fused verifier's single ``device_get`` already lands ``active`` on the
+host, so rollback row selection is sync-free; per-slot positions are
+tracked host-side by the pool, so the former ``int(cache["pos"])`` sync
+no longer exists.  Draft-token materialization (one transfer per draft
+step, shared with the reference engine) is reported separately as
+``draft_syncs`` on the block outcome.
+
+Serving contract: ``gen_block`` / ``gen_blocks`` match the reference
+engine's scheduler API (subs, prefixes, buf_len), extended with ``uids``
+so the scheduler's ``cache_mode="kv"`` path can pin each request to a
+pool slot across rounds (``admit`` at first sight, ``release`` on
+completion).  Without uids each call admits and releases an ephemeral
+slot — correct, but it re-prefills per block.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_cache, prefill
-from repro.models.transformer import verify_step
+from repro.models import (
+    CachePool,
+    decode_step_slots,
+    init_cache,
+    prefill,
+    verify_step_slots,
+)
 from repro.specdec import verify as V
 from repro.specdec.block_verify import RS_STRATEGIES, run_block_verify
 from repro.specdec.engine import (
+    BlockOutcome,
     GenerationStats,
     SpecDecConfig,
+    block_randomness,
     probs_from_logits,
 )
 
 
-def _tree_select_row(cache, k_star: int, num_rows: int):
-    """Replicate batch row ``k_star`` across all rows of every cache leaf
-    with a batch dimension (layer-stacked leaves: (L, B, ...))."""
+def _select_rollback_row(active: np.ndarray, num_accepted: int) -> int:
+    """Surviving draft row for cache rollback.
 
-    def sel(leaf):
-        if leaf.ndim >= 2 and leaf.shape[1] == num_rows:
-            row = leaf[:, k_star:k_star + 1]
-            return jnp.broadcast_to(row, leaf.shape)
-        return leaf
+    With a == 0 no draft row was accepted: every row's cache agrees on
+    the only live position (the shared pending token), so row 0 is
+    correct by symmetry.  With a > 0 an accepted path exists and the
+    final active mask must contain it — an all-False mask here means the
+    verifier and engine disagree about the block, which would silently
+    roll the cache back to a rejected row; fail loudly instead.
+    """
+    active = np.asarray(active)
+    if num_accepted <= 0:
+        return 0
+    hits = np.flatnonzero(active)
+    if hits.size == 0:
+        raise AssertionError(
+            f"rollback invariant violated: num_accepted={num_accepted} "
+            "but no draft row is active")
+    return int(hits[0])
 
-    return jax.tree.map(sel, cache)
+
+@dataclasses.dataclass
+class _Session:
+    """Pool-resident decode state for one request."""
+    uid: int
+    slot: int
+    pending: int                 # last emitted token, not yet in cache
 
 
 class CachedSpecDecEngine:
-    """Multi-draft speculative decoding with persistent KV caches.
+    """Multi-request speculative decoding with persistent KV caches.
     Dense-family target and drafter (the paper-scale pair); all six
     verification strategies route through the shared block verifier."""
 
-    def __init__(self, target: tuple, drafter: tuple, cfg: SpecDecConfig):
+    def __init__(self, target: tuple, drafter: tuple, cfg: SpecDecConfig,
+                 pool_slots: int = 1):
         self.t_params, self.t_cfg = target
         self.d_params, self.d_cfg = drafter
         assert self.t_cfg.family == "dense" and self.d_cfg.family == "dense"
+        # One drafter model and one draft temperature: the cached draft
+        # sweep scores every lane with cfg.temps[0], so heterogeneous
+        # temps would silently diverge from the reference engine's
+        # per-column path instead of staying bit-identical — refuse them.
+        assert len(set(cfg.temps)) == 1, (
+            "CachedSpecDecEngine requires homogeneous draft temperatures; "
+            "use the reference SpecDecEngine for the diverse-drafts setup")
         self.cfg = cfg
         self.vocab = self.t_cfg.vocab_size
+        self.pool_slots = pool_slots
+        self.pool: Optional[CachePool] = None
+        self._sessions: dict = {}
         self._d_step = jax.jit(
-            lambda p, t, c: decode_step(p, self.d_cfg, t, c))
+            lambda p, t, c, pos: decode_step_slots(p, self.d_cfg, t, c, pos))
         self._t_verify = jax.jit(
-            lambda p, t, c: verify_step(p, self.t_cfg, t, c))
+            lambda p, t, c, pos: verify_step_slots(p, self.t_cfg, t, c, pos))
         self._t_prefill = jax.jit(
             lambda p, b, c: prefill(p, self.t_cfg, b, c))
         self._d_prefill = jax.jit(
             lambda p, b, c: prefill(p, self.d_cfg, b, c))
+        # Serving instrumentation (read by the scheduler / benchmarks).
+        self.num_target_forwards = 0
+        self.num_draft_forwards = 0
+        # Device->host transfers spent materializing draft tokens (one
+        # per draft step per round, shared across all live requests).
+        self.num_draft_syncs = 0
 
+    # -- pool / session lifecycle ------------------------------------------
+    def _ensure_pool(self, buf_len: int) -> CachePool:
+        if self.pool is None:
+            self.pool = CachePool(
+                {"target": self.t_cfg, "drafter": self.d_cfg},
+                num_slots=self.pool_slots,
+                rows_per_slot=self.cfg.num_drafts, buf_len=buf_len)
+        else:
+            self.pool.ensure_buf(buf_len)
+        return self.pool
+
+    def admit(self, uid: int, prompt: np.ndarray, buf_len: int) -> int:
+        """Allocate a slot and prefill both models with the prompt minus
+        its last token (which becomes the first pending token)."""
+        assert uid not in self._sessions
+        prompt = np.asarray(prompt, np.int32)
+        assert len(prompt) >= 1
+        pool = self._ensure_pool(buf_len)
+        slot = pool.alloc()
+        K = self.cfg.num_drafts
+        toks = jnp.broadcast_to(jnp.asarray(prompt[None, :-1]),
+                                (K, len(prompt) - 1))
+        for name, params, fn in (("target", self.t_params, self._t_prefill),
+                                 ("drafter", self.d_params, self._d_prefill)):
+            cache = init_cache(self.t_cfg if name == "target" else self.d_cfg,
+                               K, pool.buf_len)
+            _, cache = fn(params, {"tokens": toks}, cache)
+            pool.write_prefill(name, slot, cache, pos=len(prompt) - 1)
+        self._sessions[uid] = _Session(uid=uid, slot=slot,
+                                       pending=int(prompt[-1]))
+        return slot
+
+    def release(self, uid: int) -> None:
+        sess = self._sessions.pop(uid)
+        self.pool.release(sess.slot)
+
+    # -- the batched cached block ------------------------------------------
+    def _block_randomness(self, sub: jax.Array):
+        # Shared with the reference engine so both see the same uniform
+        # sheet (the RNG contract of DESIGN.md §3.2).
+        return block_randomness(sub, self.cfg.draft_len,
+                                self.cfg.num_drafts, self.vocab)
+
+    def _block_cached(self, subs: Sequence[jax.Array],
+                      uids: Sequence[int]) -> list:
+        """Advance every listed session one speculative block: one drafter
+        decode sweep (x L) and ONE stacked verify_step over the whole
+        arena, then per-request fused verification + arena rollback."""
+        cfg = self.cfg
+        pool = self.pool
+        K, Lr, N = cfg.num_drafts, cfg.draft_len, self.vocab
+        S = pool.num_slots
+        sessions = [self._sessions[u] for u in uids]
+        r_n = len(sessions)
+        need_probs = cfg.strategy in RS_STRATEGIES
+
+        rand = [self._block_randomness(s) for s in subs]
+        log_u_all = jnp.stack([lu for lu, _ in rand])     # (R, L+1, K, N)
+
+        live_rows = np.concatenate([pool.rows_of(s.slot) for s in sessions])
+        base_pos = pool.pos.copy()                        # (S,) host
+        row_pos0 = pool.row_positions()                   # (S*K,) host
+        # The verify chunk writes positions [pos, pos + L]; the arenas are
+        # non-ring, so running past the buffer must fail loudly here
+        # rather than silently wrap/clamp the KV writes.  Callers size
+        # buf_len as len(prompt) + max_new + L + 2 (scheduler contract).
+        hi = max(base_pos[s.slot] for s in sessions) + Lr + 1
+        assert hi <= pool.buf_len, (
+            f"speculative block would write through position {hi - 1} but "
+            f"the cache arena holds {pool.buf_len}; pass a larger buf_len")
+
+        # --- drafts: L arena decode sweeps, live rows advance -------------
+        cur = np.zeros((S * K, 1), np.int32)
+        for sess in sessions:
+            cur[pool.rows_of(sess.slot)] = sess.pending
+        d_tokens = np.zeros((r_n, K, Lr), np.int32)
+        prob_steps = []
+        d_cache = pool.caches["drafter"]
+        draft_syncs = 0
+        for j in range(Lr):
+            logits, d_cache = self._d_step(
+                self.d_params, jnp.asarray(cur), d_cache,
+                jnp.asarray(row_pos0 + j))
+            self.num_draft_forwards += 1
+            live = logits[jnp.asarray(live_rows)]
+            p_all = probs_from_logits(live, cfg.temps[0], cfg.top_k, N)
+            tok = V.draft_token_from_uniforms(
+                log_u_all[:, j].reshape(r_n * K, N), p_all)
+            tk = np.asarray(tok).reshape(r_n, K)   # 1 transfer / draft step
+            draft_syncs += 1
+            d_tokens[:, :, j] = tk
+            cur = np.zeros((S * K, 1), np.int32)
+            for r, sess in enumerate(sessions):
+                cur[pool.rows_of(sess.slot), 0] = tk[r]
+            if need_probs:
+                prob_steps.append(p_all)
+        pool.update("drafter", d_cache)
+        d_probs = None
+        if need_probs:
+            d_probs = jnp.stack(prob_steps).reshape(
+                Lr, r_n, K, N).transpose(1, 2, 0, 3)
+
+        # --- target: ONE stacked verify chunk over the arena --------------
+        chunk = np.zeros((S * K, Lr + 1), np.int32)
+        for r, sess in enumerate(sessions):
+            chunk[pool.rows_of(sess.slot)] = np.concatenate(
+                [np.full((K, 1), sess.pending, np.int32), d_tokens[r]],
+                axis=1)
+        t_logits, t_cache = self._t_verify(
+            self.t_params, jnp.asarray(chunk), pool.caches["target"],
+            jnp.asarray(row_pos0))
+        self.num_target_forwards += 1
+        pool.update("target", t_cache)
+        q = probs_from_logits(t_logits[jnp.asarray(live_rows)],
+                              cfg.target_temp, cfg.top_k, N)
+        q = q.reshape(r_n, K, Lr + 1, N)
+
+        # --- fused block verification (Algorithm 2), per request ----------
+        outs = []
+        row_src = np.arange(S * K)
+        full_slots = {}          # slot -> Y_L, for a == L catch-up
+        for r, sess in enumerate(sessions):
+            hb = run_block_verify(
+                log_u_all[r], d_tokens[r],
+                None if d_probs is None else d_probs[r], q[r], rand[r][1],
+                strategy=cfg.strategy, backend=cfg.verifier_backend,
+                interpret=cfg.pallas_interpret)
+            a = hb.num_accepted
+            # hb.active is already host-side — the fused verifier's single
+            # device_get covers it, so selecting the surviving row costs
+            # no extra sync (the accounting rule of DESIGN.md §7.3).
+            k_star = _select_rollback_row(hb.active, a)
+            rows = pool.rows_of(sess.slot)
+            row_src[rows] = rows[0] + k_star
+            pool.pos[sess.slot] = base_pos[sess.slot] + 1 + a
+            if a == Lr:
+                # Drafter consumed [pending, d_1..d_{L-1}]: on full
+                # acceptance its cache is one token short — feed Y_L at
+                # position base_pos + L in the post-rollback sweep below.
+                full_slots[sess.slot] = hb.new_tokens[Lr - 1]
+            sess.pending = hb.new_tokens[-1]
+            outs.append(BlockOutcome(new_tokens=hb.new_tokens,
+                                     accepted=a,
+                                     verify_syncs=hb.host_syncs,
+                                     active=hb.active))
+
+        # --- arena rollback: one gather replicates surviving rows ---------
+        pool.rollback_rows(row_src)
+
+        if full_slots:
+            # One extra drafter sweep catches up fully-accepted slots
+            # (write Y_L at base_pos + L).  Every other row decodes a
+            # dummy token at its POST-rollback position — exactly where
+            # the next block's first sweep writes that row's pending
+            # token, so the dummy KV is overwritten before anything can
+            # attend to it (free-slot rows are fully overwritten by the
+            # admission prefill scatter).
+            extra_tokens = np.zeros((S * K, 1), np.int32)
+            extra_pos = pool.row_positions()          # post-rollback pos
+            for slot, y_l in full_slots.items():
+                rows = pool.rows_of(slot)
+                extra_tokens[rows, 0] = y_l
+                extra_pos[rows] = base_pos[slot] + Lr
+            _, d_cache = self._d_step(
+                self.d_params, jnp.asarray(extra_tokens),
+                pool.caches["drafter"], jnp.asarray(extra_pos, np.int32))
+            self.num_draft_forwards += 1
+            pool.update("drafter", d_cache)
+
+        self.num_draft_syncs += draft_syncs
+        return outs
+
+    # -- scheduler contract -------------------------------------------------
+    def gen_blocks(self, subs: Sequence[jax.Array],
+                   prefixes: Sequence[np.ndarray], buf_len: int,
+                   uids: Optional[Sequence[int]] = None) -> list:
+        """Advance R requests by one speculative block each (the reference
+        engine's scheduler contract, DESIGN.md §1).  With ``uids`` the
+        engine serves from persistent slots: unseen uids are admitted
+        (their prefix is prefilled once), known uids continue from their
+        cached state and ``prefixes[i]`` only validates the contract
+        (its last token must equal the session's pending token).
+        Without uids, each call runs against an ephemeral slot."""
+        if uids is None:
+            ephemeral = [object() for _ in prefixes]
+            try:
+                for uid, pre in zip(ephemeral, prefixes):
+                    self.admit(uid, pre, buf_len)
+                outs = self._block_cached(subs, ephemeral)
+            finally:
+                for uid in ephemeral:
+                    if uid in self._sessions:
+                        self.release(uid)
+            return outs
+        self._ensure_pool(buf_len)
+        for uid, pre in zip(uids, prefixes):
+            pre = np.asarray(pre, np.int32)
+            if uid not in self._sessions:
+                self.admit(uid, pre, buf_len)
+            else:
+                sess = self._sessions[uid]
+                assert int(pre[-1]) == sess.pending, (
+                    f"uid {uid}: prefix tail {int(pre[-1])} != cached "
+                    f"pending {sess.pending}")
+        return self._block_cached(subs, uids)
+
+    def gen_block(self, key: jax.Array, prefix: np.ndarray, buf_len: int,
+                  uid=None):
+        """Single-request speculative block (the R=1 case of gen_blocks)."""
+        uids = None if uid is None else [uid]
+        return self.gen_blocks([key], [np.asarray(prefix, np.int32)],
+                               buf_len, uids=uids)[0]
+
+    # -- public API ---------------------------------------------------------
     def generate(self, key: jax.Array, prompt: np.ndarray,
                  max_new: Optional[int] = None) -> GenerationStats:
         cfg = self.cfg
-        K, Lr = cfg.num_drafts, cfg.draft_len
-        N = self.vocab
         max_new = max_new or cfg.max_new_tokens
         prompt = np.asarray(prompt, np.int32)
-        buf = len(prompt) + max_new + Lr + 2
-        need_probs = cfg.strategy in RS_STRATEGIES
-
-        # Prefill both models with the prompt minus its last token (which
-        # becomes the first pending token), replicated across K rows.
-        toks = jnp.broadcast_to(jnp.asarray(prompt[None, :-1]),
-                                (K, len(prompt) - 1))
-        t_cache = init_cache(self.t_cfg, K, buf)
-        d_cache = init_cache(self.d_cfg, K, buf)
-        _, t_cache = self._t_prefill(self.t_params, {"tokens": toks}, t_cache)
-        _, d_cache = self._d_prefill(self.d_params, {"tokens": toks}, d_cache)
-
+        buf = len(prompt) + max_new + cfg.draft_len + 2
+        uid = object()   # private session, never collides with scheduler ids
+        self.admit(uid, prompt, buf)
         out = []
-        pending = int(prompt[-1])
         blocks = 0
         accepted_total = 0
         syncs = 0
-        while len(out) < max_new:
-            # Same key derivation as the reference engine so both engines
-            # see identical shared uniforms (exact-match testable).
-            key, sub = jax.random.split(key)
-            k_unif, k_strat = jax.random.split(sub)
-            log_u = jnp.log(jax.random.uniform(
-                k_unif, (Lr + 1, K, N),
-                minval=np.finfo(np.float32).tiny, maxval=1.0))
-            strat_keys = jax.random.split(k_strat, Lr + 1)
-
-            # --- drafts: L decode steps, K rows advance independently ---
-            d_tokens = np.zeros((K, Lr), np.int32)
-            prob_steps = []
-            d_cache_blk = d_cache
-            cur = jnp.full((K, 1), pending, jnp.int32)
-            for j in range(Lr):
-                logits, d_cache_blk = self._d_step(self.d_params, cur,
-                                                   d_cache_blk)
-                p_all = probs_from_logits(logits, cfg.temps[0], cfg.top_k, N)
-                tok = V.draft_token_from_uniforms(log_u[j], p_all)
-                d_tokens[:, j] = np.asarray(tok)
-                cur = tok[:, None]
-                if need_probs:
-                    prob_steps.append(p_all)
-            d_probs = jnp.stack(prob_steps, axis=1) if need_probs else None
-
-            # --- target: one verify chunk over [pending, drafts] ---
-            chunk = np.concatenate(
-                [np.full((K, 1), pending, np.int32), d_tokens], axis=1)
-            t_logits, t_cache_blk = self._t_verify(
-                self.t_params, jnp.asarray(chunk), t_cache)
-            q_all = probs_from_logits(t_logits, cfg.target_temp, cfg.top_k, N)
-
-            # --- fused block verification (Algorithm 2) ---
-            hb = run_block_verify(
-                log_u, d_tokens, d_probs, q_all, strat_keys,
-                strategy=cfg.strategy, backend=cfg.verifier_backend,
-                interpret=cfg.pallas_interpret)
-            new_tokens = hb.new_tokens
-            a = hb.num_accepted
-            syncs += hb.host_syncs
-
-            # --- cache rollback ---
-            if a > 0:
-                k_star = int(np.argmax(hb.active))
-            else:
-                k_star = 0  # any row: slot[pos] (pending) is identical
-            base_pos = int(t_cache["pos"])
-            t_cache = _tree_select_row(t_cache_blk, k_star, K)
-            d_cache = _tree_select_row(d_cache_blk, k_star, K)
-            t_cache = {**t_cache, "pos": jnp.asarray(base_pos + 1 + a,
-                                                     jnp.int32)}
-            d_cache = {**d_cache, "pos": jnp.asarray(base_pos + 1 + a,
-                                                     jnp.int32)}
-            # Drafter consumed [pending, d_1..d_{L-1}]: valid through
-            # base_pos + a as long as a <= L-1; when a == L the drafter
-            # cache is one token short — feed Y_L before the next block.
-            if a == Lr:
-                extra = jnp.full((K, 1), new_tokens[Lr - 1], jnp.int32)
-                d_cache = {**d_cache, "pos": jnp.asarray(base_pos + Lr,
-                                                         jnp.int32)}
-                _, d_cache = self._d_step(self.d_params, extra, d_cache)
-
-            out.extend(new_tokens)
-            accepted_total += a
-            pending = new_tokens[-1]
-            blocks += 1
+        try:
+            while len(out) < max_new:
+                # Same key derivation as the reference engine so both
+                # engines see identical shared uniforms (exact-match
+                # testable).
+                key, sub = jax.random.split(key)
+                o = self._block_cached([sub], [uid])[0]
+                out.extend(o.new_tokens)
+                accepted_total += o.accepted
+                syncs += o.verify_syncs
+                blocks += 1
+        finally:
+            self.release(uid)
         return GenerationStats(output=np.asarray(out[:max_new], np.int32),
                                blocks=blocks, accepted_drafts=accepted_total,
                                host_syncs=syncs)

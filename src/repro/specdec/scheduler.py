@@ -7,14 +7,26 @@ join at round boundaries.  Tracks the serving metrics a deployment would
 export: time-to-first-block, tokens/s, block efficiency, acceptance
 rate, host-sync counts.
 
-Two execution modes share one policy (admission order, RNG derivation,
+Three execution modes share one policy (admission order, RNG derivation,
 buffer sizing), so their outputs are bit-identical:
 
   * sequential (``batched=False``): one engine block per live request per
     round — R target forwards per round;
   * batched (``batched=True``): all live requests' draft buffers stack
     into (R*K, T) model calls via ``SpecDecEngine.gen_blocks`` — ONE
-    target forward per round regardless of R.
+    target forward per round regardless of R;
+  * kv (``cache_mode="kv"``): a ``CachedSpecDecEngine`` keeps every live
+    request's target and drafter caches resident in a slot-based cache
+    pool across rounds (admit on first block, release on completion) —
+    one drafter decode sweep plus ONE stacked ``verify_step`` per round,
+    no per-block re-prefill (DESIGN.md §7).  The first two modes
+    re-score the whole prefix every block, O(T^2) per request.
+
+RNG streams are derived per request as
+``fold_in(fold_in(round_key, uid), blocks)`` — NESTED folds, because the
+flat ``fold_in(key, uid * 1000 + blocks)`` encoding collides across
+requests once a request reaches 1000 blocks (uid 1 block 1000 == uid 2
+block 0), silently coupling two requests' draws.
 
 Buffer lengths grow monotonically to the largest live requirement, so a
 request's compiled shapes — and therefore its sampled tokens — never
@@ -65,7 +77,12 @@ class ServerMetrics:
     total_blocks: int = 0
     rounds: int = 0
     target_forwards: int = 0
-    host_syncs: int = 0
+    host_syncs: int = 0          # verification device->host transfers
+    draft_syncs: int = 0         # draft-token materialization transfers
+    # Wall time is accumulated per ``step()`` call, so ``tokens_per_s``
+    # is meaningful whether callers drive ``run()`` or ``step()``
+    # directly (``run()`` previously set it; direct ``step()`` callers
+    # divided by the 1e-9 floor and reported nonsense).
     wall_s: float = 0.0
 
     @property
@@ -77,14 +94,36 @@ class ServerMetrics:
         return self.total_tokens / max(self.total_blocks, 1)
 
 
-class SpecDecServer:
-    """Round-robin block scheduler over a shared SpecDecEngine."""
+CACHE_MODES = ("reprefill", "kv")
 
-    def __init__(self, engine: SpecDecEngine, max_batch: int = 8,
-                 batched: bool = False):
+
+class SpecDecServer:
+    """Round-robin block scheduler over a shared engine.
+
+    ``cache_mode="reprefill"`` drives a reference ``SpecDecEngine``
+    (stateless; full-prefix re-score per block, sequential or batched);
+    ``cache_mode="kv"`` drives a ``CachedSpecDecEngine`` whose cache
+    pool must have at least ``max_batch`` slots — requests are admitted
+    to a slot at their first block and released on completion, and every
+    round is one batched arena step (``batched`` is implied).
+    """
+
+    def __init__(self, engine, max_batch: int = 8,
+                 batched: bool = False, cache_mode: str = "reprefill"):
+        if cache_mode not in CACHE_MODES:
+            raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        if cache_mode == "kv":
+            if not hasattr(engine, "admit"):
+                raise TypeError(
+                    "cache_mode='kv' needs a CachedSpecDecEngine")
+            if engine.pool_slots < max_batch:
+                raise ValueError(
+                    f"engine pool has {engine.pool_slots} slots < "
+                    f"max_batch={max_batch}")
         self.engine = engine
         self.max_batch = max_batch
         self.batched = batched
+        self.cache_mode = cache_mode
         self.queue: deque = deque()
         self.live: list = []
         self._uid = 0
@@ -108,24 +147,33 @@ class SpecDecServer:
     def step(self, key: jax.Array) -> list:
         """Advance every live request by one speculative block.  Returns
         requests that finished this round."""
+        t0 = time.perf_counter()
         self._admit()
         if not self.live:
             return []
         self._buf_len = max([self._buf_len]
                             + [self._required_buf(r) for r in self.live])
-        subs = [jax.random.fold_in(key, r.uid * 1000 + r.blocks)
+        # Nested folds: a flat uid * C + blocks encoding collides across
+        # requests once blocks reaches C (see module docstring).
+        subs = [jax.random.fold_in(jax.random.fold_in(key, r.uid), r.blocks)
                 for r in self.live]
         prefixes = [np.concatenate([r.prompt,
                                     np.asarray(r.output, np.int32)])
                     for r in self.live]
         fw0 = self.engine.num_target_forwards
-        if self.batched:
+        ds0 = getattr(self.engine, "num_draft_syncs", 0)
+        if self.cache_mode == "kv":
+            outs = self.engine.gen_blocks(subs, prefixes, self._buf_len,
+                                          uids=[r.uid for r in self.live])
+        elif self.batched:
             outs = self.engine.gen_blocks(subs, prefixes, self._buf_len)
         else:
             outs = [self.engine.gen_block(sub, prefix, self._buf_len)
                     for sub, prefix in zip(subs, prefixes)]
         self.metrics.rounds += 1
         self.metrics.target_forwards += self.engine.num_target_forwards - fw0
+        self.metrics.draft_syncs += (
+            getattr(self.engine, "num_draft_syncs", 0) - ds0)
 
         finished = []
         for req, out in zip(self.live, outs):
@@ -141,18 +189,21 @@ class SpecDecServer:
                 finished.append(req)
         for req in finished:
             self.live.remove(req)
+            if self.cache_mode == "kv":
+                self.engine.release(req.uid)
             self.metrics.completed += 1
             self.metrics.total_tokens += len(req.output)
             self.metrics.total_blocks += req.blocks
+        self.metrics.wall_s += time.perf_counter() - t0
         return finished
 
     def run(self, key: jax.Array) -> list:
-        """Drain the queue; returns all completed requests in finish order."""
-        t0 = time.time()
+        """Drain the queue; returns all completed requests in finish order.
+        Wall time accrues inside ``step()`` (shared with direct-step
+        callers), so this loop adds no timing of its own."""
         done = []
         round_idx = 0
         while self.queue or self.live:
             done.extend(self.step(jax.random.fold_in(key, round_idx)))
             round_idx += 1
-        self.metrics.wall_s = time.time() - t0
         return done

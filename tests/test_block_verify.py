@@ -78,6 +78,7 @@ def test_fused_matches_legacy_blockwise(strategy):
             assert got.host_syncs == 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("strategy", STRATEGIES)
 def test_engine_backends_bit_identical(pair, strategy):
     """End-to-end: the engine emits bit-identical token sequences under

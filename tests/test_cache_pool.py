@@ -1,0 +1,104 @@
+"""Slot-based KV-cache arena: slot lifecycle, buffer growth, prefill
+scatter, and rollback-by-row-replication (DESIGN.md §7)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import CachePool, ModelConfig, init_cache, init_params, prefill
+
+CFG = ModelConfig(name="p", family="dense", num_layers=2, d_model=32,
+                  num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                  vocab_size=32, dtype="float32")
+
+
+def make_pool(slots=3, rows=2, buf=16):
+    return CachePool({"m": CFG}, num_slots=slots, rows_per_slot=rows,
+                     buf_len=buf)
+
+
+def test_alloc_is_lowest_free_slot_first():
+    pool = make_pool()
+    assert [pool.alloc(), pool.alloc(), pool.alloc()] == [0, 1, 2]
+    with pytest.raises(RuntimeError):
+        pool.alloc()
+    pool.release(1)
+    pool.release(0)
+    assert pool.alloc() == 0          # lowest free wins, not LIFO
+    assert pool.alloc() == 1
+    assert pool.num_free == 0
+
+
+def test_release_resets_position():
+    pool = make_pool()
+    slot = pool.alloc()
+    pool.pos[slot] = 7
+    pool.release(slot)
+    assert pool.pos[slot] == 0
+    with pytest.raises(AssertionError):
+        pool.release(slot)            # double free
+
+
+def test_row_positions_and_free_default():
+    pool = make_pool(slots=2, rows=3)
+    s = pool.alloc()
+    pool.pos[s] = 5
+    got = pool.row_positions()
+    assert got.tolist() == [5, 5, 5, 0, 0, 0]
+
+
+def test_write_prefill_and_rollback_replication():
+    pool = make_pool(slots=2, rows=2, buf=16)
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    slot = pool.alloc()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, 32)
+    cache = init_cache(CFG, 2, pool.buf_len)
+    _, cache = prefill(params, CFG, {"tokens": toks}, cache)
+    pool.write_prefill("m", slot, cache, pos=5)
+    assert pool.pos[slot] == 5
+    arena = pool.caches["m"]
+    np.testing.assert_array_equal(np.asarray(arena["k"][:, 0:2]),
+                                  np.asarray(cache["k"]))
+    # Replicate row 1 of slot 0 across the slot; slot 1 untouched.
+    before_other = np.asarray(arena["k"][:, 2:4])
+    pool.rollback_rows(np.array([1, 1, 2, 3]))
+    arena = pool.caches["m"]
+    np.testing.assert_array_equal(np.asarray(arena["k"][:, 0]),
+                                  np.asarray(cache["k"][:, 1]))
+    np.testing.assert_array_equal(np.asarray(arena["k"][:, 1]),
+                                  np.asarray(cache["k"][:, 1]))
+    np.testing.assert_array_equal(np.asarray(arena["k"][:, 2:4]),
+                                  before_other)
+
+
+def test_ensure_buf_grows_and_preserves_content():
+    pool = make_pool(slots=1, rows=2, buf=8)
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    slot = pool.alloc()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 32)
+    cache = init_cache(CFG, 2, pool.buf_len)
+    _, cache = prefill(params, CFG, {"tokens": toks}, cache)
+    pool.write_prefill("m", slot, cache, pos=6)
+    old_k = np.asarray(pool.caches["m"]["k"])
+    pool.ensure_buf(20)
+    assert pool.buf_len == 20
+    new_k = np.asarray(pool.caches["m"]["k"])
+    assert new_k.shape[3] == 20
+    np.testing.assert_array_equal(new_k[:, :, :, :8], old_k)
+    assert not new_k[:, :, :, 8:].any()
+    pool.ensure_buf(10)               # never shrinks
+    assert pool.buf_len == 20
+
+
+def test_prefill_buffer_mismatch_rejected():
+    pool = make_pool(slots=1, rows=2, buf=16)
+    slot = pool.alloc()
+    small = init_cache(CFG, 2, 8)
+    with pytest.raises(AssertionError):
+        pool.write_prefill("m", slot, small, pos=4)
+
+
+def test_ring_caches_rejected():
+    swa = CFG.replace(name="swa", sliding_window=8)
+    with pytest.raises(AssertionError):
+        CachePool({"m": swa}, num_slots=1, rows_per_slot=1, buf_len=16)

@@ -1,13 +1,18 @@
 """Cached (production) engine vs the reference recompute engine: identical
-shared randomness must give identical output tokens."""
+shared randomness must give identical output tokens — across all six
+verification strategies and both fused verifier backends — plus the
+cached path's host-sync accounting and rollback-row contracts."""
 
 import jax
 import numpy as np
 import pytest
 
 from repro.models import ModelConfig, init_params
-from repro.specdec import SpecDecConfig, SpecDecEngine
-from repro.specdec.engine_cached import CachedSpecDecEngine
+from repro.specdec import STRATEGIES, SpecDecConfig, SpecDecEngine
+from repro.specdec.engine_cached import (
+    CachedSpecDecEngine,
+    _select_rollback_row,
+)
 
 TCFG = ModelConfig(name="t", family="dense", num_layers=3, d_model=64,
                    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
@@ -21,23 +26,46 @@ def pair():
             init_params(jax.random.PRNGKey(1), DCFG))
 
 
-@pytest.mark.parametrize("strategy", ["gls", "gls_strong"])
-def test_cached_engine_matches_reference(pair, strategy):
+def _match_runs(pair, strategy, backend, runs=4, max_new=20):
     tp, dp = pair
-    sd = SpecDecConfig(num_drafts=4, draft_len=3, strategy=strategy,
-                       max_new_tokens=20, top_k=0)
+    k = 1 if strategy in ("single", "daliri") else 4
+    sd = SpecDecConfig(num_drafts=k, draft_len=3, strategy=strategy,
+                       max_new_tokens=max_new, top_k=0,
+                       verifier_backend=backend)
     ref = SpecDecEngine((tp, TCFG), [(dp, DCFG)], sd)
     fast = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
     prompt = np.array([1, 2, 3, 4], np.int32)
     matches = 0
-    for i in range(4):
+    for i in range(runs):
         key = jax.random.PRNGKey(50 + i)
         o1 = ref.generate(key, prompt)
         o2 = fast.generate(key, prompt)
         matches += int(np.array_equal(o1.output, o2.output))
+    return matches
+
+
+@pytest.mark.parametrize("strategy", ["gls", "gls_strong"])
+def test_cached_engine_matches_reference(pair, strategy):
     # fp differences between cached and recompute logits can flip a rare
     # near-tie race; demand near-perfect agreement.
+    matches = _match_runs(pair, strategy, "xla")
     assert matches >= 3, f"only {matches}/4 runs matched"
+
+
+@pytest.mark.parametrize("strategy", ["specinfer", "spectr", "single",
+                                      "daliri"])
+def test_cached_engine_matches_reference_rs(pair, strategy):
+    matches = _match_runs(pair, strategy, "xla", runs=2, max_new=14)
+    assert matches >= 1, f"0/2 runs matched for {strategy}"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_cached_engine_matches_reference_pallas(pair, strategy):
+    """Full nightly sweep: the pallas verifier backend must agree with
+    the reference engine for every strategy (interpret mode on CPU)."""
+    matches = _match_runs(pair, strategy, "pallas", runs=2, max_new=14)
+    assert matches >= 1, f"0/2 runs matched for {strategy}/pallas"
 
 
 def test_cached_engine_be_reasonable(pair):
@@ -47,3 +75,105 @@ def test_cached_engine_be_reasonable(pair):
     fast = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
     o = fast.generate(jax.random.PRNGKey(9), np.array([5, 6, 7], np.int32))
     assert 1.0 <= o.block_efficiency <= sd.draft_len + 1
+
+
+def test_cached_engine_host_sync_accounting(pair):
+    """DESIGN.md §7.3: with a fused backend the verification path costs
+    exactly ONE device->host transfer per block (positions are tracked
+    host-side; rollback row selection reuses the verifier's transfer),
+    and the drafter loop costs one transfer per draft step."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=4, draft_len=3, strategy="gls",
+                       max_new_tokens=16, top_k=0, verifier_backend="xla")
+    fast = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
+    o = fast.generate(jax.random.PRNGKey(3), np.array([1, 2, 3], np.int32))
+    assert o.host_syncs == o.blocks
+    assert fast.num_draft_syncs == o.blocks * sd.draft_len
+
+
+def test_cached_engine_multi_request_pool_matches_solo(pair):
+    """Two co-resident requests in one pool emit exactly the tokens each
+    would emit alone (slot isolation + per-request RNG streams)."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls", top_k=0)
+    prompts = {7: np.array([1, 2, 3], np.int32),
+               9: np.array([4, 5, 6, 7], np.int32)}
+    max_new = 8
+    buf = max(len(p) for p in prompts.values()) + max_new + 4
+
+    def drive(engine, uids):
+        out = {u: [] for u in uids}
+        prefix = {u: list(prompts[u]) for u in uids}
+        blocks = {u: 0 for u in uids}
+        while any(len(out[u]) < max_new for u in uids):
+            live = [u for u in uids if len(out[u]) < max_new]
+            subs = [jax.random.fold_in(jax.random.PRNGKey(11), u * 100
+                                       + blocks[u]) for u in live]
+            res = engine.gen_blocks(
+                subs, [np.asarray(prefix[u], np.int32) for u in live],
+                buf, uids=live)
+            for u, o in zip(live, res):
+                out[u].extend(o.new_tokens)
+                prefix[u].extend(o.new_tokens)
+                blocks[u] += 1
+                if len(out[u]) >= max_new:
+                    engine.release(u)
+        return {u: out[u][:max_new] for u in uids}
+
+    multi = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd, pool_slots=2)
+    both = drive(multi, [7, 9])
+    assert multi.pool.num_free == 2
+    for u in (7, 9):
+        solo = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd,
+                                   pool_slots=1)
+        assert drive(solo, [u]) == {u: both[u]}, f"uid {u} diverged"
+
+
+def test_gen_blocks_validates_prefix_tail(pair):
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls", top_k=0)
+    eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
+    prefix = np.array([1, 2, 3], np.int32)
+    out = eng.gen_block(jax.random.PRNGKey(0), prefix, 16, uid=1)
+    good = np.concatenate([prefix, np.asarray(out.new_tokens, np.int32)])
+    with pytest.raises(AssertionError, match="pending"):
+        bad = np.concatenate([good, [int(good[-1]) + 1]]).astype(np.int32)
+        eng.gen_block(jax.random.PRNGKey(1), bad, 16, uid=1)
+
+
+def test_heterogeneous_draft_temps_rejected(pair):
+    """The cached draft sweep scores every lane at temps[0]; diverse
+    temps must fail loudly instead of silently diverging from the
+    reference engine's per-column path."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls",
+                       draft_temps=(0.7, 1.3), top_k=0)
+    with pytest.raises(AssertionError, match="homogeneous"):
+        CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
+
+
+def test_block_past_buffer_rejected(pair):
+    """Arenas are non-ring: a block that would write past buf_len fails
+    loudly instead of wrapping/clamping KV writes."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls", top_k=0)
+    eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
+    prefix = np.array([1, 2, 3, 4], np.int32)
+    buf = len(prefix) + 2   # room for one block at most
+    out = eng.gen_block(jax.random.PRNGKey(0), prefix, buf, uid=5)
+    with pytest.raises(AssertionError, match="cache arena holds"):
+        for i in range(8):
+            prefix = np.concatenate(
+                [prefix, np.asarray(out.new_tokens, np.int32)])
+            out = eng.gen_block(jax.random.PRNGKey(1 + i), prefix, buf,
+                                uid=5)
+
+
+def test_select_rollback_row_contract():
+    # a == 0: every row's cache agrees on the pending token — row 0.
+    assert _select_rollback_row(np.array([False, False]), 0) == 0
+    # a > 0: first surviving row, explicitly.
+    assert _select_rollback_row(np.array([False, True, True]), 2) == 1
+    # a > 0 with no survivor is a verifier/engine disagreement: loud.
+    with pytest.raises(AssertionError, match="rollback invariant"):
+        _select_rollback_row(np.array([False, False]), 1)

@@ -1,27 +1,49 @@
-"""Serving scheduler: queueing, admission, completion, metrics."""
+"""Serving scheduler: queueing, admission, completion, metrics, RNG
+stream derivation, and cache_mode="kv" equivalence."""
 
 import jax
 import numpy as np
+import pytest
 
 from repro.models import ModelConfig, init_params
-from repro.specdec import SpecDecConfig, SpecDecEngine
+from repro.specdec import CachedSpecDecEngine, SpecDecConfig, SpecDecEngine
 from repro.specdec.scheduler import SpecDecServer
 
+TCFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=48,
+                   num_heads=4, num_kv_heads=2, head_dim=12, d_ff=96,
+                   vocab_size=32, dtype="float32")
+DCFG = TCFG.replace(name="d", num_layers=1)
+SD = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls", top_k=0)
 
-def test_server_drains_queue_with_metrics():
-    tcfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=48,
-                       num_heads=4, num_kv_heads=2, head_dim=12, d_ff=96,
-                       vocab_size=32, dtype="float32")
-    dcfg = tcfg.replace(name="d", num_layers=1)
-    tp = init_params(jax.random.PRNGKey(0), tcfg)
-    dp = init_params(jax.random.PRNGKey(1), dcfg)
-    eng = SpecDecEngine((tp, tcfg), [(dp, dcfg)],
-                        SpecDecConfig(num_drafts=2, draft_len=2,
-                                      strategy="gls", top_k=0))
-    server = SpecDecServer(eng, max_batch=2)
-    uids = [server.submit(np.array([1, 2, 3], np.int32), max_new=6)
-            for _ in range(5)]
+
+@pytest.fixture(scope="module")
+def pair():
+    return (init_params(jax.random.PRNGKey(0), TCFG),
+            init_params(jax.random.PRNGKey(1), DCFG))
+
+
+def make_server(pair, *, cache_mode="reprefill", batched=False,
+                max_batch=2):
+    tp, dp = pair
+    if cache_mode == "kv":
+        eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), SD,
+                                  pool_slots=max_batch)
+    else:
+        eng = SpecDecEngine((tp, TCFG), [(dp, DCFG)], SD)
+    return SpecDecServer(eng, max_batch=max_batch, batched=batched,
+                         cache_mode=cache_mode)
+
+
+def run_trace(server, n=5, max_new=6):
+    uids = [server.submit(np.array([1, 2, 3], np.int32), max_new=max_new)
+            for _ in range(n)]
     done = server.run(jax.random.PRNGKey(7))
+    return uids, done
+
+
+def test_server_drains_queue_with_metrics(pair):
+    server = make_server(pair)
+    uids, done = run_trace(server)
     assert len(done) == 5
     assert sorted(r.uid for r in done) == sorted(uids)
     for r in done:
@@ -32,3 +54,88 @@ def test_server_drains_queue_with_metrics():
     assert m.total_tokens == 30
     assert m.tokens_per_s > 0
     assert 1.0 <= m.mean_block_efficiency <= 3.0
+
+
+def test_kv_mode_bit_identical_to_sequential_reference(pair):
+    """The tentpole contract: serving from persistent KV caches changes
+    speed, never tokens (DESIGN.md §1, §7)."""
+    outs = {}
+    for mode in ("reprefill", "kv"):
+        server = make_server(pair, cache_mode=mode)
+        _, done = run_trace(server)
+        outs[mode] = {r.uid: list(r.output) for r in done}
+    assert outs["kv"] == outs["reprefill"]
+
+
+def test_kv_mode_releases_slots_and_counts_forwards(pair):
+    server = make_server(pair, cache_mode="kv")
+    _, done = run_trace(server)
+    assert len(done) == 5
+    eng = server.engine
+    assert eng.pool.num_free == eng.pool.num_slots
+    # ONE stacked verify per round, vs R re-score forwards sequentially.
+    assert server.metrics.target_forwards == server.metrics.rounds
+    assert server.metrics.draft_syncs > 0
+
+
+def test_kv_mode_rejects_reference_engine(pair):
+    tp, dp = pair
+    eng = SpecDecEngine((tp, TCFG), [(dp, DCFG)], SD)
+    with pytest.raises(TypeError, match="CachedSpecDecEngine"):
+        SpecDecServer(eng, cache_mode="kv")
+    with pytest.raises(ValueError, match="unknown cache_mode"):
+        SpecDecServer(eng, cache_mode="mystery")
+    cached = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), SD, pool_slots=1)
+    with pytest.raises(ValueError, match="slots"):
+        SpecDecServer(cached, max_batch=4, cache_mode="kv")
+
+
+def test_rng_streams_no_flat_encoding_collision():
+    """Regression: the flat ``fold_in(key, uid * 1000 + blocks)`` stream
+    collides across requests once a request reaches 1000 blocks —
+    (uid=1, blocks=1000) and (uid=2, blocks=0) both folded 2000, giving
+    two requests identical randomness.  The nested derivation keeps the
+    streams distinct."""
+    key = jax.random.PRNGKey(7)
+    flat = lambda uid, blocks: jax.random.fold_in(key, uid * 1000 + blocks)
+    nested = lambda uid, blocks: jax.random.fold_in(
+        jax.random.fold_in(key, uid), blocks)
+    collide_a, collide_b = (1, 1000), (2, 0)
+    assert np.array_equal(  # the bug this guards against
+        jax.random.key_data(flat(*collide_a)),
+        jax.random.key_data(flat(*collide_b)))
+    assert not np.array_equal(
+        jax.random.key_data(nested(*collide_a)),
+        jax.random.key_data(nested(*collide_b)))
+
+
+def test_scheduler_uses_nested_rng_streams(pair):
+    """The scheduler's per-request subkeys must follow the nested
+    contract: same trace, uids remapped by +1, all streams distinct."""
+    server = make_server(pair)
+    seen = []
+    orig = server.engine.gen_block
+
+    def spy(sub, prefix, buf_len):
+        seen.append(np.asarray(jax.random.key_data(sub)).tolist())
+        return orig(sub, prefix, buf_len)
+
+    server.engine.gen_block = spy
+    run_trace(server, n=3, max_new=4)
+    assert len(seen) == len({tuple(s) for s in seen}), \
+        "duplicate RNG stream across request blocks"
+
+
+def test_wall_s_accumulates_under_direct_step(pair):
+    """Regression: only ``run()`` used to set wall_s, so driving
+    ``step()`` directly reported tokens/s against the 1e-9 floor."""
+    server = make_server(pair)
+    server.submit(np.array([1, 2, 3], np.int32), max_new=4)
+    rounds = 0
+    while (server.queue or server.live) and rounds < 50:
+        server.step(jax.random.fold_in(jax.random.PRNGKey(3), rounds))
+        rounds += 1
+    m = server.metrics
+    assert m.total_tokens >= 4
+    assert m.wall_s > 0
+    assert m.tokens_per_s < 1e7, "tokens_per_s divided by the 1e-9 floor"

@@ -93,6 +93,7 @@ def test_gls_acceptance_beats_single_draft():
     assert accept_of("gls") > accept_of("daliri") + 0.05
 
 
+@pytest.mark.slow
 def test_verify_is_drafter_invariant_by_construction():
     """Definition 1: gls_verify consumes only token VALUES — feeding the
     same tokens with wildly different 'drafter' provenance must give a
