@@ -11,9 +11,13 @@ Two comparisons the serving refactor is accountable for:
     prefix re-score) vs batched (ONE (R*K, T) re-score forward per
     round) vs kv (persistent KV caches in a multi-request slot pool —
     one drafter decode sweep plus ONE stacked verify_step per round, no
-    re-prefill): tokens/s at R=4 live requests, forwards per round, and
+    re-prefill) vs kv_fused (the whole round as ONE jitted device
+    program, DESIGN.md §8 — 0 draft syncs, 1 host sync per round):
+    tokens/s at R=4 live requests, forwards per round, sync counts, and
     output-equality checks (all paths must be bit-identical to the
-    sequential reference mode).
+    sequential reference mode).  CI gates on
+    ``kv_fused_speedup_vs_kv >= 1`` — a fused round slower than the
+    host-driven round is a regression.
 
 ``collect()`` returns the JSON payload CI archives as BENCH_specdec.json.
 """
@@ -53,8 +57,8 @@ def _bench_scheduler(target, drafter, *, n_requests=8, max_new=MAX_NEW):
                        top_k=50, max_new_tokens=max_new)
     out = {}
     outputs = {}
-    for mode in ("sequential", "batched", "kv"):
-        if mode == "kv":
+    for mode in ("sequential", "batched", "kv", "kv_fused"):
+        if mode in ("kv", "kv_fused"):
             eng = CachedSpecDecEngine(target, drafter, sd,
                                       pool_slots=SCHED_BATCH)
         else:
@@ -63,7 +67,7 @@ def _bench_scheduler(target, drafter, *, n_requests=8, max_new=MAX_NEW):
         def make_server():
             return SpecDecServer(eng, max_batch=SCHED_BATCH,
                                  batched=mode == "batched",
-                                 cache_mode="kv" if mode == "kv"
+                                 cache_mode=mode if mode.startswith("kv")
                                  else "reprefill")
 
         # Warmup pass compiles this mode's forwards so the measured run
@@ -90,10 +94,13 @@ def _bench_scheduler(target, drafter, *, n_requests=8, max_new=MAX_NEW):
     out["live_requests"] = SCHED_BATCH
     out["bit_identical"] = {
         mode: outputs["sequential"] == outputs[mode]
-        for mode in ("batched", "kv")}
+        for mode in ("batched", "kv", "kv_fused")}
     out["kv_speedup_vs_reprefill"] = (
         out["kv"]["tokens_per_s"] / max(out["sequential"]["tokens_per_s"],
                                         1e-9))
+    out["kv_fused_speedup_vs_kv"] = (
+        out["kv_fused"]["tokens_per_s"] / max(out["kv"]["tokens_per_s"],
+                                              1e-9))
     return out
 
 
@@ -128,16 +135,19 @@ def run(fast: bool = False):
              f"tok_s={r['tokens_per_s']:.1f};host_syncs={r['host_syncs']};"
              f"BE={r['block_efficiency']:.3f}")
     sched = payload["scheduler"]
-    for mode in ("sequential", "batched", "kv"):
+    for mode in ("sequential", "batched", "kv", "kv_fused"):
         m = sched[mode]
         emit(f"scheduler_{mode}", 0.0,
              f"tok_s={m['tokens_per_s']:.1f};rounds={m['rounds']};"
              f"target_forwards={m['target_forwards']};"
-             f"host_syncs={m['host_syncs']}")
+             f"host_syncs={m['host_syncs']};"
+             f"draft_syncs={m['draft_syncs']}")
     emit("scheduler_paths_bit_identical", 0.0,
          str(sched["bit_identical"]))
     emit("scheduler_kv_speedup_vs_reprefill", 0.0,
          f"{sched['kv_speedup_vs_reprefill']:.2f}x")
+    emit("scheduler_kv_fused_speedup_vs_kv", 0.0,
+         f"{sched['kv_fused_speedup_vs_kv']:.2f}x")
     return payload
 
 

@@ -2,13 +2,14 @@
 GLS speculative-decoding engine, with serving metrics (tokens/s, mean
 block efficiency, per-request latencies).
 
-Runs the same request trace through ALL THREE scheduler paths —
-sequential (one engine block per request per round), batched (all live
-requests' draft buffers stacked into one (R*K, T) target forward per
-round), and kv (persistent KV caches in a multi-request slot pool, no
-per-block re-prefill, DESIGN.md §7) — and checks their outputs are
-bit-identical while reporting the tokens/s and target-forward-count
-deltas.
+Runs the same request trace through ALL THREE cache modes — sequential
+(stateless reference engine, full-prefix re-score, one engine block per
+request per round), kv (persistent KV caches in a multi-request slot
+pool, no per-block re-prefill, DESIGN.md §7), and kv_fused (the same
+pool with every round fused into ONE jitted device program, DESIGN.md
+§8) — and checks their outputs are bit-identical while reporting the
+tokens/s deltas and per-round sync counts (the fused mode's signature:
+0 draft syncs and exactly 1 host sync per round).
 
 Run:  PYTHONPATH=src python examples/serve_scheduler.py [--requests 6]
 """
@@ -60,24 +61,23 @@ def main():
     sd = SpecDecConfig(num_drafts=4, draft_len=3, strategy="gls", top_k=50)
 
     def serve(mode):
-        if mode == "kv":
+        if mode in ("kv", "kv_fused"):
             eng = CachedSpecDecEngine((tp, TARGET), (dp, DRAFTER), sd,
                                       pool_slots=args.max_batch)
             server = SpecDecServer(eng, max_batch=args.max_batch,
-                                   cache_mode="kv")
+                                   cache_mode=mode)
         else:
             eng = SpecDecEngine((tp, TARGET), [(dp, DRAFTER)], sd)
-            server = SpecDecServer(eng, max_batch=args.max_batch,
-                                   batched=mode == "batched")
+            server = SpecDecServer(eng, max_batch=args.max_batch)
         for i in range(args.requests):
             server.submit(corpus[i * 29:i * 29 + 12], max_new=args.max_new)
         done = server.run(jax.random.PRNGKey(7))
         return server, done
 
     outputs = {}
-    for mode in ("sequential", "batched", "kv"):
+    for mode in ("sequential", "kv", "kv_fused"):
         print(f"\n== serving {args.requests} requests "
-              f"(max_batch={args.max_batch}, mode={mode}) ==")
+              f"(max_batch={args.max_batch}, cache_mode={mode}) ==")
         server, done = serve(mode)
         for r in done:
             lat = (r.t_done - r.t_submit)
@@ -88,9 +88,13 @@ def main():
               f"mean BE: {m.mean_block_efficiency:.2f}  "
               f"completed: {m.completed}  rounds: {m.rounds}  "
               f"target-forwards: {m.target_forwards}")
+        print(f"syncs/round: draft={m.draft_syncs / m.rounds:.1f}  "
+              f"host={m.host_syncs / m.rounds:.1f}  "
+              f"(totals: draft={m.draft_syncs} host={m.host_syncs} "
+              f"over {m.rounds} rounds)")
         outputs[mode] = {r.uid: list(r.output) for r in done}
 
-    for mode in ("batched", "kv"):
+    for mode in ("kv", "kv_fused"):
         match = outputs["sequential"] == outputs[mode]
         print(f"\n{mode} output == sequential output: {match}")
         if not match:

@@ -7,9 +7,19 @@ reduction held in VMEM scratch, so the (K, N) race table never makes a
 second HBM round trip.  The K-way min for the target rides the sublane
 dimension of the same pass.
 
-Grid: (B, N // TILE_N); each program reduces one vocab tile for one batch
-row.  Scratch carries the running draft minima (K,) and the target
-minimum (scalar) across the vocab-tile loop (sequential minor grid axis).
+``gls_race`` grid: (B, N // TILE_N); each program reduces one vocab tile
+for one batch row.  Scratch carries the running draft minima (K,) and
+the target minimum (scalar) across the vocab-tile loop (sequential minor
+grid axis).
+
+``gls_row_race`` (the block-verification hot path) additionally tiles
+the ROW axis: the vocab tile shrinks to fit the actual vocabulary (a
+128-symbol bench vocab must not be padded to the 2048 default — 16x
+wasted compute), several batch rows share one program (grid invocations
+are the dominant cost in interpret mode and amortize DMA setup on TPU),
+and the row count is bucketed up to the row-block multiple so nearby
+batch sizes (L+1 for one request, S*(L+1) for a fused round) reuse one
+compiled kernel instead of recompiling per shape.
 """
 
 from __future__ import annotations
@@ -22,6 +32,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_TILE_N = 2048
+# Per-operand VMEM budget for one (ROW_BLOCK, K, TILE_N) f32 input block.
+_ROW_VMEM_BYTES = 2 * 1024 * 1024
+# Row-bucket granularity: B is padded up to a multiple of this (capped by
+# the VMEM budget) so the kernel compiles once per (K, N) rather than
+# once per batch size.
+_ROW_BLOCK = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
 def _kernel(log_s_ref, log_p_ref, log_q_ref, active_ref,
@@ -77,8 +97,9 @@ def _row_kernel(log_s_ref, log_q_ref,
 
     The target side of Algorithm 2 needs per-(step, draft) row statistics
     — the evolving ``active`` mask is applied OUTSIDE, on (L+1, K)
-    scalars — so one batched pass over (B=L+1, K, N) serves the whole
-    verification block (DESIGN.md §3)."""
+    scalars — so one batched pass over (B, K, N) serves the whole
+    verification block (DESIGN.md §3).  Blocks are (ROW_BLOCK, K, TILE_N)
+    — a row block of batch rows reduces together in one program."""
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -86,22 +107,33 @@ def _row_kernel(log_s_ref, log_q_ref,
         rmin_ref[...] = jnp.full_like(rmin_ref, jnp.inf)
         rarg_ref[...] = jnp.zeros_like(rarg_ref)
 
-    log_s = log_s_ref[0]          # (K, TILE_N)
-    log_q = log_q_ref[0]
+    log_s = log_s_ref[...]        # (RB, K, TILE_N)
+    log_q = log_q_ref[...]
 
     score = log_s - log_q
     score = jnp.where(log_q > -jnp.inf, score, jnp.inf)
-    tile_min = jnp.min(score, axis=1)                        # (K,)
-    tile_arg = jnp.argmin(score, axis=1).astype(jnp.int32)
+    tile_min = jnp.min(score, axis=2)                        # (RB, K)
+    tile_arg = jnp.argmin(score, axis=2).astype(jnp.int32)
     tile_idx = t * tile_n + tile_arg
-    better = tile_min < rmin_ref[:, 0]
-    rmin_ref[:, 0] = jnp.where(better, tile_min, rmin_ref[:, 0])
-    rarg_ref[:, 0] = jnp.where(better, tile_idx, rarg_ref[:, 0])
+    better = tile_min < rmin_ref[...]
+    rmin_ref[...] = jnp.where(better, tile_min, rmin_ref[...])
+    rarg_ref[...] = jnp.where(better, tile_idx, rarg_ref[...])
 
     @pl.when(t == n_tiles - 1)
     def _emit():
-        rmin_out_ref[0, :] = rmin_ref[:, 0]
-        rarg_out_ref[0, :] = rarg_ref[:, 0]
+        rmin_out_ref[...] = rmin_ref[...]
+        rarg_out_ref[...] = rarg_ref[...]
+
+
+def _row_race_tiling(b: int, k: int, n: int, tile_n: int):
+    """(tile_n, row_block, b_pad): lane-aligned vocab tile no larger than
+    the (padded) vocab, and the largest row block that keeps one f32
+    input operand inside the VMEM budget — bucketing B so every batch
+    size in a bucket shares one compiled kernel."""
+    tile_n = min(tile_n, _round_up(n, 128))
+    rb = max(1, _ROW_VMEM_BYTES // (k * tile_n * 4))
+    rb = min(rb, _ROW_BLOCK)
+    return tile_n, rb, _round_up(b, rb)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
@@ -113,40 +145,45 @@ def gls_row_race(log_s: jax.Array, log_q: jax.Array, *,
     its vocab index for every (batch, draft) row.  ``-inf`` in log_q
     marks zero-probability symbols (never win).  Ties break toward the
     lower vocab index, matching ``jnp.argmin``.
+
+    ``tile_n`` is an upper bound: the actual vocab tile shrinks to the
+    lane-aligned vocabulary so small vocabs are not padded to the 2048
+    default, and batch rows are blocked/bucketed per ``_row_race_tiling``
+    (rows are independent, so padding rows changes no live output).
     """
     b, k, n = log_s.shape
-    if n % tile_n:
-        pad = tile_n - n % tile_n
-        log_s = jnp.pad(log_s, ((0, 0), (0, 0), (0, pad)),
+    tile_n, rb, b_pad = _row_race_tiling(b, k, n, tile_n)
+    pad_n = _round_up(n, tile_n) - n
+    if pad_n or b_pad > b:
+        log_s = jnp.pad(log_s, ((0, b_pad - b), (0, 0), (0, pad_n)),
                         constant_values=0.0)
-        log_q = jnp.pad(log_q, ((0, 0), (0, 0), (0, pad)),
+        log_q = jnp.pad(log_q, ((0, b_pad - b), (0, 0), (0, pad_n)),
                         constant_values=jnp.float32(-jnp.inf))
-        n = n + pad
-    n_tiles = n // tile_n
+    n_tiles = log_s.shape[2] // tile_n
 
     kernel = functools.partial(_row_kernel, tile_n=tile_n, n_tiles=n_tiles)
     rmin, rarg = pl.pallas_call(
         kernel,
-        grid=(b, n_tiles),
+        grid=(b_pad // rb, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, k, tile_n), lambda i, t: (i, 0, t)),
-            pl.BlockSpec((1, k, tile_n), lambda i, t: (i, 0, t)),
+            pl.BlockSpec((rb, k, tile_n), lambda i, t: (i, 0, t)),
+            pl.BlockSpec((rb, k, tile_n), lambda i, t: (i, 0, t)),
         ],
         out_specs=[
-            pl.BlockSpec((1, k), lambda i, t: (i, 0)),
-            pl.BlockSpec((1, k), lambda i, t: (i, 0)),
+            pl.BlockSpec((rb, k), lambda i, t: (i, 0)),
+            pl.BlockSpec((rb, k), lambda i, t: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, k), jnp.float32),
-            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((k, 1), jnp.float32),    # running row minima
-            pltpu.VMEM((k, 1), jnp.int32),      # running row argmins
+            pltpu.VMEM((rb, k), jnp.float32),   # running row minima
+            pltpu.VMEM((rb, k), jnp.int32),     # running row argmins
         ],
         interpret=interpret,
     )(log_s, log_q)
-    return rmin, rarg
+    return rmin[:b], rarg[:b]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))

@@ -8,7 +8,9 @@ target/drafter pair, driven by the batched request scheduler.
 re-score per block; add ``--batched`` to stack live requests into one
 target forward per round); ``--cache-mode kv`` serves from persistent
 KV caches in a multi-request slot pool (DESIGN.md §7) — same tokens,
-no re-prefill.
+no re-prefill; ``--cache-mode kv_fused`` additionally runs each whole
+round as ONE jitted device program (DESIGN.md §8) — same tokens again,
+zero draft syncs, one host sync per round.
 
 Loads checkpoints if given, otherwise trains a small pair on the
 synthetic corpus first (CPU-scale demonstration of the full path)."""
@@ -39,14 +41,18 @@ def main():
                     help="block-verification backend (pallas routes the "
                          "K-way race through the gls_race kernel)")
     ap.add_argument("--cache-mode", default="reprefill",
-                    choices=("reprefill", "kv"),
+                    choices=("reprefill", "kv", "kv_fused"),
                     help="reprefill: reference engine, full-prefix "
                          "re-score; kv: persistent KV caches in a "
-                         "multi-request slot pool")
+                         "multi-request slot pool; kv_fused: kv with "
+                         "the whole round fused into one device program")
     ap.add_argument("--batched", action="store_true",
                     help="stack live requests into one target forward "
                          "per round (reprefill mode; kv always batches)")
     args = ap.parse_args()
+    if args.cache_mode == "kv_fused" and args.backend == "legacy":
+        ap.error("--cache-mode kv_fused needs a device verifier backend "
+                 "(xla or pallas)")
 
     import sys, os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__),
@@ -65,7 +71,7 @@ def main():
                         strategy=args.strategy, top_k=50,
                         max_new_tokens=args.max_new,
                         verifier_backend=args.backend)
-    if args.cache_mode == "kv":
+    if args.cache_mode in ("kv", "kv_fused"):
         eng = CachedSpecDecEngine(target, drafter, cfg,
                                   pool_slots=args.max_batch)
     else:
@@ -82,7 +88,8 @@ def main():
           f"backend={args.backend} cache_mode={args.cache_mode} "
           f"BE={be:.2f} tok/s={m.tokens_per_s:.1f} "
           f"rounds={m.rounds} target-forwards={m.target_forwards} "
-          f"verify-syncs={m.host_syncs} over {len(done)} requests")
+          f"verify-syncs={m.host_syncs} draft-syncs={m.draft_syncs} "
+          f"over {len(done)} requests")
 
 
 if __name__ == "__main__":

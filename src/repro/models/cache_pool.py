@@ -25,6 +25,15 @@ Lifecycle contract (DESIGN.md §7):
   * ``ensure_buf`` grows every arena to a longer buffer (zero-padded on
     the time axis) when a larger request is admitted; buffer length only
     ever grows, mirroring the scheduler's monotone buffer policy.
+
+Positions live in TWO places (DESIGN.md §8): the host mirror
+(``pool.pos``) is authoritative for admission/allocation and sizing
+decisions, and a lazily materialized device copy (``pos_device()``)
+feeds the fused round program, which advances positions in-program and
+hands back the updated array (``adopt_round``).  Host-side lifecycle
+writes (alloc/release/prefill) invalidate the device copy; the fused
+round refreshes the host mirror from its packed result, so the two
+views never drift.
 """
 
 from __future__ import annotations
@@ -74,6 +83,9 @@ class CachePool:
                        for name, cfg in self.cfgs.items()}
         # Host-side per-slot decode position (== tokens whose KV is live).
         self.pos = np.zeros(num_slots, np.int64)
+        # Device copy of ``pos`` for the fused round program; rebuilt
+        # lazily after any host-side position write (DESIGN.md §8).
+        self._pos_dev = None
         self._free = list(range(num_slots))
 
     def _init_arena(self, cfg: ModelConfig, buf_len: int) -> dict:
@@ -92,11 +104,13 @@ class CachePool:
         slot = min(self._free)
         self._free.remove(slot)
         self.pos[slot] = 0
+        self._pos_dev = None
         return slot
 
     def release(self, slot: int) -> None:
         assert 0 <= slot < self.num_slots and slot not in self._free
         self.pos[slot] = 0
+        self._pos_dev = None
         self._free.append(slot)
 
     def rows_of(self, slot: int) -> np.ndarray:
@@ -130,6 +144,7 @@ class CachePool:
         self.caches[name] = {kk: _scatter_rows(arena[kk], cache[kk], r0=r0)
                              for kk in ("k", "v")}
         self.pos[slot] = pos
+        self._pos_dev = None
 
     def update(self, name: str, cache: dict) -> None:
         """Adopt the arena returned by a slots model call."""
@@ -145,6 +160,28 @@ class CachePool:
         for name, arena in self.caches.items():
             self.caches[name] = {kk: _gather_rows(arena[kk], idx)
                                  for kk in ("k", "v")}
+
+    # -- fused-round device state (DESIGN.md §8) ---------------------------
+    def pos_device(self) -> jax.Array:
+        """(num_slots,) i32 device positions for the fused round program.
+        Rebuilt from the host mirror after lifecycle writes; otherwise
+        the array handed back by the previous round is reused, so the
+        steady-state round uploads nothing."""
+        if self._pos_dev is None:
+            self._pos_dev = jnp.asarray(self.pos, jnp.int32)
+        return self._pos_dev
+
+    def adopt_round(self, caches: Dict[str, dict], pos_dev: jax.Array,
+                    pos_host: np.ndarray) -> None:
+        """Adopt a fused round program's outputs: the per-model {k, v}
+        arenas (the donated input buffers are dead — callers must never
+        touch them again), the advanced device positions, and the host
+        mirror decoded from the round's packed result."""
+        assert set(caches) == set(self.caches)
+        for name, c in caches.items():
+            self.caches[name] = {"k": c["k"], "v": c["v"]}
+        self._pos_dev = pos_dev
+        self.pos[:] = np.asarray(pos_host, np.int64)
 
     def row_positions(self, default: int = 0) -> np.ndarray:
         """(num_slots * rows_per_slot,) per-row positions for the slots

@@ -106,6 +106,8 @@ def attention(
     window: int = 0,             # sliding window (0 = unbounded)
     kv_len: Optional[jax.Array] = None,  # valid KV prefix length (decode);
                                          # scalar or per-row (B,)
+    use_kernel: bool = False,    # route the decode case through Pallas
+    interpret: bool = True,      # kernel interpret mode (CPU containers)
 ) -> jax.Array:
     """GQA attention without materializing repeated KV heads.
 
@@ -113,8 +115,22 @@ def attention(
     Per-row ``q_offset`` / ``kv_len`` support cache arenas where each
     batch row sits at its own decode position (DESIGN.md §7); the scalar
     path computes the identical masked scores it always did.
+
+    ``use_kernel`` routes the single-query decode case (s == 1,
+    non-causal, windowless, ``kv_len``-masked — exactly the slot-aware
+    decode step) through the ``kernels/decode_attention`` Pallas kernel:
+    an online-softmax stream over KV tiles, numerically equivalent to
+    the dense path but not bit-equal (different reduction order), so it
+    stays opt-in where bit-identity contracts apply.
     """
     b, h, s, d = q.shape
+    if (use_kernel and s == 1 and not causal and not window
+            and kv_len is not None):
+        from repro.kernels.decode_attention.ops import decode_attention_op
+        kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+        out = decode_attention_op(q[:, :, 0], k, v, kvl,
+                                  interpret=interpret)
+        return out[:, :, None, :]
     hkv = k.shape[1]
     g = h // hkv
     q = q.reshape(b, hkv, g, s, d)

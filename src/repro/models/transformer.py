@@ -212,7 +212,8 @@ def _rowwise_cache_write(cache_k, cache_v, k, v, starts):
             jax.vmap(upd)(cache_v, v, starts))
 
 
-def _block_decode_slots(params_l, carry, cache_l, cfg: ModelConfig):
+def _block_decode_slots(params_l, carry, cache_l, cfg: ModelConfig,
+                        use_kernel: bool = False, interpret: bool = True):
     """Single-token decode where every batch row sits at its own position
     (cache-arena serving: rows = slots x drafts, DESIGN.md §7)."""
     x, pos = carry  # x: (B, 1, D); pos: (B,) per-row current position
@@ -229,7 +230,8 @@ def _block_decode_slots(params_l, carry, cache_l, cfg: ModelConfig):
     new_k, new_v = _rowwise_cache_write(cache_l["k"], cache_l["v"], k, v,
                                         pos % t_cache)
     kv_len = jnp.minimum(pos + 1, t_cache)
-    out = L.attention(q, new_k, new_v, causal=False, kv_len=kv_len)
+    out = L.attention(q, new_k, new_v, causal=False, kv_len=kv_len,
+                      use_kernel=use_kernel, interpret=interpret)
     x = x + L.project_out(p, out)
     x = x + L.swiglu(params_l["mlp"],
                      L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
@@ -237,12 +239,16 @@ def _block_decode_slots(params_l, carry, cache_l, cfg: ModelConfig):
 
 
 def decode_step_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
-                      cache: dict, pos: jax.Array):
+                      cache: dict, pos: jax.Array, *,
+                      use_kernel: bool = False, interpret: bool = True):
     """Per-row-position decode: tokens (B, 1), pos (B,) -> (logits
     (B, Vpad), new {k, v} cache).  Position tracking lives with the
-    caller (host-side in the cache pool), not in the cache dict."""
+    caller (host-side in the cache pool), not in the cache dict.
+    ``use_kernel`` streams the per-row attention through the Pallas
+    decode-attention kernel (numerically equivalent, not bit-equal)."""
     x = params["embed"][tokens]
-    fn = functools.partial(_block_decode_slots, cfg=cfg)
+    fn = functools.partial(_block_decode_slots, cfg=cfg,
+                           use_kernel=use_kernel, interpret=interpret)
     layer_cache = {"k": cache["k"], "v": cache["v"]}
     (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
                                     cache=layer_cache)

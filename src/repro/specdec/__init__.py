@@ -7,6 +7,7 @@ from repro.specdec.block_verify import (
     RACE_STRATEGIES,
     RS_STRATEGIES,
     block_verify,
+    block_verify_batched,
     legacy_block_verify,
     run_block_verify,
 )
@@ -49,6 +50,7 @@ __all__ = [
     "StepResult",
     "autoregressive_reference",
     "block_verify",
+    "block_verify_batched",
     "daliri_verify",
     "draft_token_from_uniforms",
     "gls_verify",

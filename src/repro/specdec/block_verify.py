@@ -230,6 +230,46 @@ def block_verify(log_u: jax.Array, draft_tokens: jax.Array,
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
+def block_verify_batched(log_u: jax.Array, draft_tokens: jax.Array,
+                         draft_probs: Optional[jax.Array], q_all: jax.Array,
+                         strat_keys: jax.Array, *, strategy: str = "gls",
+                         backend: str = "xla",
+                         interpret: bool = True) -> BlockVerifyResult:
+    """Batched Algorithm-2 verification for R requests, device-resident.
+
+    The fused-round building block (DESIGN.md §8): every argument is the
+    per-request array of ``block_verify`` stacked on a leading R axis
+    (log_u (R, L+1, K, N); draft_tokens (R, K, L); draft_probs
+    (R, K, L, N) or None; q_all (R, K, L+1, N); strat_keys (R, L+1)
+    keys, required — race strategies simply ignore theirs).  Returns a
+    BlockVerifyResult whose leaves carry the R axis and performs NO host
+    transfer — callers pack it into their round's single fetch.
+
+    For the race family the R and L+1 axes collapse into one
+    ``_race_row_stats`` pass of (R*(L+1), K, N) — rows are independent,
+    so results are bit-identical to R separate ``block_verify`` calls
+    (as are the vmapped scan cores: jax.random ops under vmap equal
+    their per-lane unbatched results).  ``backend="legacy"`` is a host
+    loop and cannot run here.
+    """
+    if strategy in RACE_STRATEGIES:
+        r, l1, k, n = log_u.shape
+        q_steps = jnp.swapaxes(q_all, 1, 2)       # (R, L+1, K, N)
+        rmin, rarg = _race_row_stats(log_u.reshape(r * l1, k, n),
+                                     q_steps.reshape(r * l1, k, n),
+                                     backend, interpret)
+        return jax.vmap(
+            lambda rm, ra, dt, qa, sk: _race_block(strategy, rm, ra, dt,
+                                                   qa, sk))(
+            rmin.reshape(r, l1, k), rarg.reshape(r, l1, k),
+            draft_tokens, q_all, strat_keys)
+    if strategy in RS_STRATEGIES:
+        return jax.vmap(
+            lambda dt, dp, qa, sk: _rs_block(strategy, dt, dp, qa, sk))(
+            draft_tokens, draft_probs, q_all, strat_keys)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
 # ---------------------------------------------------------------------------
 # Legacy host-loop verifier (the pre-refactor engine code, kept verbatim
 # as the equivalence oracle and for host-sync-count comparisons)

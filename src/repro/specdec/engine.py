@@ -59,6 +59,11 @@ class SpecDecConfig:
     max_new_tokens: int = 64
     verifier_backend: str = "xla"  # "legacy" | "xla" | "pallas"
     pallas_interpret: bool = True  # interpret=True runs the kernel on CPU
+    # Route the cached engine's slot-aware decode attention through the
+    # kernels/decode_attention Pallas kernel.  Numerically equivalent
+    # but NOT bit-equal to the dense path (online-softmax reduction
+    # order), so it defaults off wherever bit-identity contracts apply.
+    decode_kernel: bool = False
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:

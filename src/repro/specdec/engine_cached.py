@@ -39,6 +39,18 @@ so the scheduler's ``cache_mode="kv"`` path can pin each request to a
 pool slot across rounds (``admit`` at first sight, ``release`` on
 completion).  Without uids each call admits and releases an ephemeral
 slot — correct, but it re-prefills per block.
+
+``gen_blocks(..., fused=True)`` (the scheduler's ``cache_mode=
+"kv_fused"``) replaces the host-driven round above with ONE jitted
+device program (DESIGN.md §8): the L-step drafter sweep runs as a
+``lax.scan`` with drafted tokens staying device-resident, the stacked
+verify, batched Algorithm-2 verification, surviving-row selection,
+arena-wide rollback, and the residual drafter catch-up all execute in
+the same dispatch with donated cache buffers, and the only
+device->host transfer per round is the packed result fetch
+(``draft_syncs == 0``, one ``host_sync`` per round).  Token streams are
+bit-identical to the host-driven path for every strategy and device
+verifier backend.
 """
 
 from __future__ import annotations
@@ -58,7 +70,11 @@ from repro.models import (
     verify_step_slots,
 )
 from repro.specdec import verify as V
-from repro.specdec.block_verify import RS_STRATEGIES, run_block_verify
+from repro.specdec.block_verify import (
+    RS_STRATEGIES,
+    block_verify_batched,
+    run_block_verify,
+)
 from repro.specdec.engine import (
     BlockOutcome,
     GenerationStats,
@@ -120,9 +136,14 @@ class CachedSpecDecEngine:
         self.pool: Optional[CachePool] = None
         self._sessions: dict = {}
         self._d_step = jax.jit(
-            lambda p, t, c, pos: decode_step_slots(p, self.d_cfg, t, c, pos))
+            lambda p, t, c, pos: decode_step_slots(
+                p, self.d_cfg, t, c, pos, use_kernel=cfg.decode_kernel,
+                interpret=cfg.pallas_interpret))
         self._t_verify = jax.jit(
             lambda p, t, c, pos: verify_step_slots(p, self.t_cfg, t, c, pos))
+        # Fused round program (built lazily once the pool geometry is
+        # known; recompiles only when buf_len grows, DESIGN.md §8).
+        self._fused_round = None
         self._t_prefill = jax.jit(
             lambda p, b, c: prefill(p, self.t_cfg, b, c))
         self._d_prefill = jax.jit(
@@ -306,23 +327,211 @@ class CachedSpecDecEngine:
         self.num_draft_syncs += draft_syncs
         return outs
 
+    # -- the fused single-dispatch round (DESIGN.md §8) ---------------------
+    def _build_fused_round(self):
+        """Compile the whole speculative round into one jitted program.
+
+        Geometry (S slots x K lanes, L steps) is closed over, so the
+        program has fixed shapes regardless of how many requests are
+        live — liveness is a data-level (S,) mask, and free slots ride
+        along as dead rows exactly as they do in the host-driven round.
+        Cache arenas and device positions are DONATED (where the backend
+        supports it): callers must adopt the returned buffers via
+        ``CachePool.adopt_round`` and never touch the inputs again.
+        """
+        cfg, t_cfg, d_cfg = self.cfg, self.t_cfg, self.d_cfg
+        K, L, N = cfg.num_drafts, cfg.draft_len, self.vocab
+        S = self.pool.num_slots
+        rows = S * K
+        slot_of = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+        row_ids = jnp.arange(rows, dtype=jnp.int32)
+        need_probs = cfg.strategy in RS_STRATEGIES
+        if cfg.verifier_backend == "legacy":
+            raise ValueError(
+                "fused rounds need a device verifier backend ('xla' or "
+                "'pallas'); the 'legacy' host loop cannot run in-program")
+
+        def round_fn(t_params, d_params, t_kv, d_kv, pos, pending, live,
+                     subs):
+            live_row = jnp.repeat(live, K)
+            # Rows of slots NOT advancing this round (free, or occupied
+            # but unlisted) still ride along as dead rows; they must
+            # decode at their own position — the pool zeroes ``pos`` on
+            # release, and an occupied slot's garbage writes land at
+            # [pos, pos+L], beyond everything its next real round reads
+            # (the same safety argument as the host-driven sweep).
+            row_pos = jnp.repeat(pos, K)
+            # Per-slot shared uniforms + strategy keys, drawn in-program:
+            # vmapped jax.random equals its per-lane unbatched draws, so
+            # each live slot sees exactly the sheet the host-driven
+            # round would hand it (the §3.2 RNG contract).
+            log_u, strat_keys = jax.vmap(
+                lambda s: block_randomness(s, L, K, N))(subs)
+
+            # --- drafter sweep: L decode steps, tokens device-resident
+            cur0 = jnp.where(live_row, jnp.repeat(pending, K),
+                             0).astype(jnp.int32)[:, None]
+
+            def dstep(carry, inp):
+                cur, dk, dv = carry
+                log_u_j, j = inp
+                logits, dc = decode_step_slots(
+                    d_params, d_cfg, cur, {"k": dk, "v": dv}, row_pos + j,
+                    use_kernel=cfg.decode_kernel,
+                    interpret=cfg.pallas_interpret)
+                p_all = probs_from_logits(logits, cfg.temps[0], cfg.top_k,
+                                          N)
+                tok = V.draft_token_from_uniforms(
+                    log_u_j.reshape(rows, N), p_all)
+                tok = jnp.where(live_row, tok, 0).astype(jnp.int32)
+                ys = (tok, p_all) if need_probs else tok
+                return (tok[:, None], dc["k"], dc["v"]), ys
+
+            xs = (jnp.swapaxes(log_u[:, :L], 0, 1),
+                  jnp.arange(L, dtype=jnp.int32))
+            (_, d_k, d_v), ys = jax.lax.scan(
+                dstep, (cur0, d_kv["k"], d_kv["v"]), xs)
+            toks = ys[0] if need_probs else ys            # (L, rows)
+            d_tokens = toks.T.reshape(S, K, L)
+            d_probs = (ys[1].reshape(L, S, K, N).transpose(1, 2, 0, 3)
+                       if need_probs else None)
+
+            # --- target: ONE stacked verify chunk over the arena ------
+            chunk = jnp.concatenate([cur0, toks.T], axis=1)
+            t_logits, t_kv2 = verify_step_slots(
+                t_params, t_cfg, chunk, t_kv, row_pos)
+            q = probs_from_logits(t_logits, cfg.target_temp, cfg.top_k,
+                                  N).reshape(S, K, L + 1, N)
+
+            # --- Algorithm 2, batched over slots ----------------------
+            res = block_verify_batched(
+                log_u, d_tokens, d_probs, q, strat_keys,
+                strategy=cfg.strategy, backend=cfg.verifier_backend,
+                interpret=cfg.pallas_interpret)
+            a = jnp.where(live, res.num_accepted, 0)
+            # Surviving row: a == 0 -> row 0 (all rows agree on the
+            # pending token); a > 0 -> first active row.  The a>0 ⇒
+            # some-row-active invariant is re-checked host-side on the
+            # packed result, where it can still fail loudly (§7.2).
+            k_star = jnp.where(
+                a > 0, jnp.argmax(res.active, axis=1).astype(jnp.int32), 0)
+
+            # --- arena rollback: in-program surviving-row gather ------
+            surv = slot_of * K + k_star[slot_of]
+            row_src = jnp.where(live_row, surv, row_ids)
+            t_kv2 = {kk: jnp.take(t_kv2[kk], row_src, axis=1)
+                     for kk in ("k", "v")}
+            d_kv2 = {"k": jnp.take(d_k, row_src, axis=1),
+                     "v": jnp.take(d_v, row_src, axis=1)}
+            new_pos = jnp.where(live, pos + 1 + a, pos)
+
+            # --- residual drafter catch-up ----------------------------
+            # Fully-accepted slots write Y_L at base_pos + L; every
+            # other row decodes a dummy token at its post-rollback
+            # position, which the next round's first sweep (or the next
+            # admission's prefill scatter) overwrites before anything
+            # attends it.  Unlike the host-driven round this step is
+            # unconditional — a fixed program cannot branch on host
+            # data — and the dummy writes are harmless for the same
+            # reason they are in the conditional path.
+            full = live & (a == L)
+            y_l = res.tokens[:, L - 1]
+            extra_tok = jnp.where(full[slot_of], y_l[slot_of],
+                                  0).astype(jnp.int32)[:, None]
+            extra_pos = jnp.where(full, pos + L, new_pos)
+            _, d_kv3 = decode_step_slots(
+                d_params, d_cfg, extra_tok, d_kv2,
+                jnp.repeat(extra_pos, K),
+                use_kernel=cfg.decode_kernel,
+                interpret=cfg.pallas_interpret)
+
+            packed = {"tokens": res.tokens, "accepted": a,
+                      "active": res.active, "pos": new_pos}
+            return t_kv2, d_kv3, new_pos, packed
+
+        # Buffer donation (the §8 donation contract).  CPU backends do
+        # not implement donation and would warn on every dispatch, so
+        # only donate where it is real.
+        donate = (2, 3, 4) if jax.default_backend() != "cpu" else ()
+        return jax.jit(round_fn, donate_argnums=donate)
+
+    def _block_fused(self, subs: Sequence[jax.Array],
+                     uids: Sequence[int]) -> list:
+        """Advance every listed session one speculative round as ONE
+        device dispatch; the round's only device->host transfer is the
+        packed (tokens, accepted, active, pos) fetch."""
+        cfg, pool = self.cfg, self.pool
+        K, L, S = cfg.num_drafts, cfg.draft_len, pool.num_slots
+        sessions = [self._sessions[u] for u in uids]
+        # Same loud non-ring overflow guard as the host-driven round.
+        hi = max(pool.pos[s.slot] for s in sessions) + L + 1
+        assert hi <= pool.buf_len, (
+            f"speculative block would write through position {hi - 1} but "
+            f"the cache arena holds {pool.buf_len}; pass a larger buf_len")
+
+        live = np.zeros(S, bool)
+        pending = np.zeros(S, np.int32)
+        # Free slots still need a syntactically valid key for the
+        # in-program randomness; their draws are masked garbage.
+        sub_rows = [jax.random.PRNGKey(0)] * S
+        for sess, sub in zip(sessions, subs):
+            live[sess.slot] = True
+            pending[sess.slot] = sess.pending
+            sub_rows[sess.slot] = sub
+
+        if self._fused_round is None:
+            self._fused_round = self._build_fused_round()
+        t_kv, d_kv, pos_dev, packed = self._fused_round(
+            self.t_params, self.d_params,
+            pool.caches["target"], pool.caches["drafter"],
+            pool.pos_device(), jnp.asarray(pending), jnp.asarray(live),
+            jnp.stack(sub_rows))
+        self.num_draft_forwards += L + 1
+        self.num_target_forwards += 1
+
+        host = jax.device_get(packed)          # the round's ONE transfer
+        pool.adopt_round({"target": t_kv, "drafter": d_kv}, pos_dev,
+                         host["pos"])
+        outs = []
+        for i, sess in enumerate(sessions):
+            s = sess.slot
+            acc = int(host["accepted"][s])
+            active = np.asarray(host["active"][s])
+            if acc > 0 and not active.any():
+                raise AssertionError(
+                    f"rollback invariant violated: num_accepted={acc} "
+                    "but no draft row is active")
+            toks = [int(t) for t in host["tokens"][s][:acc + 1]]
+            sess.pending = toks[-1]
+            # The packed fetch is one transfer for the WHOLE round;
+            # attribute it to the round's first outcome so aggregate
+            # accounting reads host_syncs == rounds (§7.3).
+            outs.append(BlockOutcome(new_tokens=toks, accepted=acc,
+                                     verify_syncs=1 if i == 0 else 0,
+                                     active=active))
+        return outs
+
     # -- scheduler contract -------------------------------------------------
     def gen_blocks(self, subs: Sequence[jax.Array],
                    prefixes: Sequence[np.ndarray], buf_len: int,
-                   uids: Optional[Sequence[int]] = None) -> list:
+                   uids: Optional[Sequence[int]] = None,
+                   fused: bool = False) -> list:
         """Advance R requests by one speculative block each (the reference
         engine's scheduler contract, DESIGN.md §1).  With ``uids`` the
         engine serves from persistent slots: unseen uids are admitted
         (their prefix is prefilled once), known uids continue from their
         cached state and ``prefixes[i]`` only validates the contract
         (its last token must equal the session's pending token).
-        Without uids, each call runs against an ephemeral slot."""
+        Without uids, each call runs against an ephemeral slot.
+        ``fused=True`` runs the round as one device dispatch (§8) —
+        same tokens, 0 draft syncs, 1 host sync per round."""
+        block = self._block_fused if fused else self._block_cached
         if uids is None:
             ephemeral = [object() for _ in prefixes]
             try:
                 for uid, pre in zip(ephemeral, prefixes):
                     self.admit(uid, pre, buf_len)
-                outs = self._block_cached(subs, ephemeral)
+                outs = block(subs, ephemeral)
             finally:
                 for uid in ephemeral:
                     if uid in self._sessions:
@@ -338,24 +547,26 @@ class CachedSpecDecEngine:
                 assert int(pre[-1]) == sess.pending, (
                     f"uid {uid}: prefix tail {int(pre[-1])} != cached "
                     f"pending {sess.pending}")
-        return self._block_cached(subs, uids)
+        return block(subs, uids)
 
     def gen_block(self, key: jax.Array, prefix: np.ndarray, buf_len: int,
-                  uid=None):
+                  uid=None, fused: bool = False):
         """Single-request speculative block (the R=1 case of gen_blocks)."""
         uids = None if uid is None else [uid]
         return self.gen_blocks([key], [np.asarray(prefix, np.int32)],
-                               buf_len, uids=uids)[0]
+                               buf_len, uids=uids, fused=fused)[0]
 
     # -- public API ---------------------------------------------------------
     def generate(self, key: jax.Array, prompt: np.ndarray,
-                 max_new: Optional[int] = None) -> GenerationStats:
+                 max_new: Optional[int] = None,
+                 fused: bool = False) -> GenerationStats:
         cfg = self.cfg
         max_new = max_new or cfg.max_new_tokens
         prompt = np.asarray(prompt, np.int32)
         buf = len(prompt) + max_new + cfg.draft_len + 2
         uid = object()   # private session, never collides with scheduler ids
         self.admit(uid, prompt, buf)
+        block = self._block_fused if fused else self._block_cached
         out = []
         blocks = 0
         accepted_total = 0
@@ -366,7 +577,7 @@ class CachedSpecDecEngine:
                 # engines see identical shared uniforms (exact-match
                 # testable).
                 key, sub = jax.random.split(key)
-                o = self._block_cached([sub], [uid])[0]
+                o = block([sub], [uid])[0]
                 out.extend(o.new_tokens)
                 accepted_total += o.accepted
                 syncs += o.verify_syncs

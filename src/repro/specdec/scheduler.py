@@ -7,7 +7,7 @@ join at round boundaries.  Tracks the serving metrics a deployment would
 export: time-to-first-block, tokens/s, block efficiency, acceptance
 rate, host-sync counts.
 
-Three execution modes share one policy (admission order, RNG derivation,
+All execution modes share one policy (admission order, RNG derivation,
 buffer sizing), so their outputs are bit-identical:
 
   * sequential (``batched=False``): one engine block per live request per
@@ -20,7 +20,12 @@ buffer sizing), so their outputs are bit-identical:
     pool across rounds (admit on first block, release on completion) —
     one drafter decode sweep plus ONE stacked ``verify_step`` per round,
     no per-block re-prefill (DESIGN.md §7).  The first two modes
-    re-score the whole prefix every block, O(T^2) per request.
+    re-score the whole prefix every block, O(T^2) per request;
+  * kv_fused (``cache_mode="kv_fused"``): same engine and pool, but the
+    whole round — drafter sweep, stacked verify, Algorithm-2
+    verification, rollback, catch-up — runs as ONE jitted device
+    program (DESIGN.md §8): no per-draft-step host transfer
+    (``draft_syncs == 0``) and exactly one host sync per round.
 
 RNG streams are derived per request as
 ``fold_in(fold_in(round_key, uid), blocks)`` — NESTED folds, because the
@@ -94,7 +99,7 @@ class ServerMetrics:
         return self.total_tokens / max(self.total_blocks, 1)
 
 
-CACHE_MODES = ("reprefill", "kv")
+CACHE_MODES = ("reprefill", "kv", "kv_fused")
 
 
 class SpecDecServer:
@@ -105,17 +110,19 @@ class SpecDecServer:
     ``cache_mode="kv"`` drives a ``CachedSpecDecEngine`` whose cache
     pool must have at least ``max_batch`` slots — requests are admitted
     to a slot at their first block and released on completion, and every
-    round is one batched arena step (``batched`` is implied).
+    round is one batched arena step (``batched`` is implied);
+    ``cache_mode="kv_fused"`` is the same serving policy with the round
+    executed as one fused device program (DESIGN.md §8).
     """
 
     def __init__(self, engine, max_batch: int = 8,
                  batched: bool = False, cache_mode: str = "reprefill"):
         if cache_mode not in CACHE_MODES:
             raise ValueError(f"unknown cache_mode {cache_mode!r}")
-        if cache_mode == "kv":
+        if cache_mode in ("kv", "kv_fused"):
             if not hasattr(engine, "admit"):
                 raise TypeError(
-                    "cache_mode='kv' needs a CachedSpecDecEngine")
+                    f"cache_mode={cache_mode!r} needs a CachedSpecDecEngine")
             if engine.pool_slots < max_batch:
                 raise ValueError(
                     f"engine pool has {engine.pool_slots} slots < "
@@ -162,9 +169,11 @@ class SpecDecServer:
                     for r in self.live]
         fw0 = self.engine.num_target_forwards
         ds0 = getattr(self.engine, "num_draft_syncs", 0)
-        if self.cache_mode == "kv":
-            outs = self.engine.gen_blocks(subs, prefixes, self._buf_len,
-                                          uids=[r.uid for r in self.live])
+        if self.cache_mode in ("kv", "kv_fused"):
+            outs = self.engine.gen_blocks(
+                subs, prefixes, self._buf_len,
+                uids=[r.uid for r in self.live],
+                fused=self.cache_mode == "kv_fused")
         elif self.batched:
             outs = self.engine.gen_blocks(subs, prefixes, self._buf_len)
         else:
@@ -189,7 +198,7 @@ class SpecDecServer:
                 finished.append(req)
         for req in finished:
             self.live.remove(req)
-            if self.cache_mode == "kv":
+            if self.cache_mode in ("kv", "kv_fused"):
                 self.engine.release(req.uid)
             self.metrics.completed += 1
             self.metrics.total_tokens += len(req.output)

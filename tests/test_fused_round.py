@@ -1,0 +1,168 @@
+"""Fused single-dispatch rounds (DESIGN.md §8): the kv_fused path must
+be BIT-identical to the host-driven kv path — and, through it, to the
+sequential reference scheduler — across all six verification strategies
+and both device verifier backends, while spending zero draft syncs and
+exactly one host sync per round."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.specdec import (
+    STRATEGIES,
+    CachedSpecDecEngine,
+    SpecDecConfig,
+    SpecDecEngine,
+    SpecDecServer,
+)
+
+TCFG = ModelConfig(name="t", family="dense", num_layers=3, d_model=64,
+                   num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                   vocab_size=64, dtype="float32")
+DCFG = TCFG.replace(name="d", num_layers=1)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return (init_params(jax.random.PRNGKey(0), TCFG),
+            init_params(jax.random.PRNGKey(1), DCFG))
+
+
+def _generate_both(pair, strategy, backend, runs=2, max_new=14):
+    """(kv output, fused output) per run, identical shared randomness."""
+    tp, dp = pair
+    k = 1 if strategy in ("single", "daliri") else 4
+    sd = SpecDecConfig(num_drafts=k, draft_len=3, strategy=strategy,
+                       max_new_tokens=max_new, top_k=0,
+                       verifier_backend=backend)
+    prompt = np.array([1, 2, 3, 4], np.int32)
+    outs = []
+    for i in range(runs):
+        key = jax.random.PRNGKey(50 + i)
+        kv = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
+        fz = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
+        outs.append((kv.generate(key, prompt).output,
+                     fz.generate(key, prompt, fused=True).output))
+    return outs
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_fused_round_bit_identical_to_kv(pair, strategy):
+    """The hard contract: fusing the round into one dispatch changes
+    dispatch count and sync count, never tokens — exact equality, every
+    strategy."""
+    for kv_out, fz_out in _generate_both(pair, strategy, "xla"):
+        np.testing.assert_array_equal(kv_out, fz_out)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_fused_round_bit_identical_to_kv_pallas(pair, strategy):
+    """Nightly sweep: same exactness with the batched gls_race row
+    kernel standing in for the xla race reduction."""
+    for kv_out, fz_out in _generate_both(pair, strategy, "pallas"):
+        np.testing.assert_array_equal(kv_out, fz_out)
+
+
+def test_fused_scheduler_bit_identical_to_sequential_reference(pair):
+    """kv_fused through the scheduler == the sequential re-prefill
+    reference trace (the DESIGN.md §1 layering contract, extended)."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls", top_k=0)
+    outs = {}
+    for mode in ("reprefill", "kv_fused"):
+        if mode == "reprefill":
+            eng = SpecDecEngine((tp, TCFG), [(dp, DCFG)], sd)
+        else:
+            eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd,
+                                      pool_slots=2)
+        server = SpecDecServer(eng, max_batch=2, cache_mode=mode)
+        for _ in range(5):
+            server.submit(np.array([1, 2, 3], np.int32), max_new=6)
+        done = server.run(jax.random.PRNGKey(7))
+        outs[mode] = {r.uid: list(r.output) for r in done}
+    assert outs["kv_fused"] == outs["reprefill"]
+
+
+def test_fused_sync_accounting(pair):
+    """DESIGN.md §7.3 (revised): a fused round spends ZERO draft syncs
+    (tokens never leave the device mid-round) and exactly ONE host sync
+    (the packed result fetch) — so over a server trace,
+    draft_syncs == 0 and host_syncs == rounds."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=4, draft_len=3, strategy="gls", top_k=0)
+    eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd, pool_slots=2)
+    server = SpecDecServer(eng, max_batch=2, cache_mode="kv_fused")
+    for _ in range(3):
+        server.submit(np.array([1, 2, 3], np.int32), max_new=8)
+    server.run(jax.random.PRNGKey(3))
+    m = server.metrics
+    assert m.rounds > 0
+    assert m.draft_syncs == 0
+    assert m.host_syncs == m.rounds
+    # ONE stacked verify per round on the target side too.
+    assert m.target_forwards == m.rounds
+    assert eng.num_draft_syncs == 0
+
+
+def test_fused_generate_sync_accounting(pair):
+    """Single-request accounting: host_syncs == blocks (R=1 rounds)."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=4, draft_len=3, strategy="gls",
+                       max_new_tokens=16, top_k=0)
+    eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
+    o = eng.generate(jax.random.PRNGKey(3), np.array([1, 2, 3], np.int32),
+                     fused=True)
+    assert o.host_syncs == o.blocks
+    assert eng.num_draft_syncs == 0
+
+
+def test_fused_rejects_legacy_backend(pair):
+    """The legacy verifier is a host loop — it cannot run inside the
+    fused program and must fail loudly, not silently fall back."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls", top_k=0,
+                       verifier_backend="legacy")
+    eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd)
+    with pytest.raises(ValueError, match="legacy"):
+        eng.generate(jax.random.PRNGKey(0), np.array([1, 2, 3], np.int32),
+                     fused=True)
+
+
+def test_fused_multi_request_matches_solo(pair):
+    """Slot isolation survives fusion: two co-resident fused requests
+    emit exactly what each emits alone in a one-slot pool."""
+    tp, dp = pair
+    sd = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls", top_k=0)
+    prompts = {7: np.array([1, 2, 3], np.int32),
+               9: np.array([4, 5, 6, 7], np.int32)}
+    max_new = 8
+    buf = max(len(p) for p in prompts.values()) + max_new + 4
+
+    def drive(engine, uids):
+        out = {u: [] for u in uids}
+        prefix = {u: list(prompts[u]) for u in uids}
+        blocks = {u: 0 for u in uids}
+        while any(len(out[u]) < max_new for u in uids):
+            live = [u for u in uids if len(out[u]) < max_new]
+            subs = [jax.random.fold_in(jax.random.PRNGKey(11), u * 100
+                                       + blocks[u]) for u in live]
+            res = engine.gen_blocks(
+                subs, [np.asarray(prefix[u], np.int32) for u in live],
+                buf, uids=live, fused=True)
+            for u, o in zip(live, res):
+                out[u].extend(o.new_tokens)
+                prefix[u].extend(o.new_tokens)
+                blocks[u] += 1
+                if len(out[u]) >= max_new:
+                    engine.release(u)
+        return {u: out[u][:max_new] for u in uids}
+
+    multi = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd, pool_slots=2)
+    both = drive(multi, [7, 9])
+    assert multi.pool.num_free == 2
+    for u in (7, 9):
+        solo = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sd,
+                                   pool_slots=1)
+        assert drive(solo, [u]) == {u: both[u]}, f"uid {u} diverged"

@@ -10,8 +10,8 @@ from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.gls_race.kernel import gls_race
-from repro.kernels.gls_race.ref import gls_race_ref
+from repro.kernels.gls_race.kernel import gls_race, gls_row_race
+from repro.kernels.gls_race.ref import gls_race_ref, gls_row_race_ref
 
 
 # ---------------------------------------------------------------------------
@@ -38,6 +38,44 @@ def test_gls_race_matches_ref(b, k, n, tile):
     xr, yr = gls_race_ref(log_s, log_p, log_q, active)
     np.testing.assert_array_equal(np.asarray(x), np.asarray(xr))
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+@pytest.mark.parametrize("b,k,n", [
+    (1, 1, 128),      # minimal
+    (5, 8, 128),      # the serving-bench shape: small vocab, B = L+1
+    (3, 4, 500),      # unaligned vocab (lane padding path)
+    (20, 4, 128),     # fused-round shape: B = S * (L+1), row bucketing
+    (2, 2, 50_000),   # large vocab, many tiles
+])
+def test_gls_row_race_matches_ref(b, k, n):
+    """The tuned (row-blocked, vocab-fitted, B-bucketed) row kernel must
+    stay BIT-identical to the jnp row statistics — backend
+    interchangeability of the fused verifier depends on it."""
+    key = jax.random.PRNGKey(b * 1000 + n)
+    ku, kq = jax.random.split(key)
+    u = jax.random.uniform(ku, (b, k, n), minval=1e-30, maxval=1.0)
+    log_s = jnp.log(-jnp.log(u))
+    q = jax.random.dirichlet(kq, jnp.ones(n), (b, k))
+    q = q.at[..., : n // 4].set(0.0)       # zero-prob symbols never win
+    q = q / q.sum(-1, keepdims=True)
+    log_q = jnp.where(q > 0, jnp.log(jnp.maximum(q, 1e-37)), -jnp.inf)
+    rmin, rarg = gls_row_race(log_s, log_q)
+    rmin_r, rarg_r = gls_row_race_ref(log_s, log_q)
+    np.testing.assert_array_equal(np.asarray(rmin), np.asarray(rmin_r))
+    np.testing.assert_array_equal(np.asarray(rarg), np.asarray(rarg_r))
+    assert bool(jnp.all(rarg >= n // 4))
+
+
+def test_gls_row_race_bucketed_batches_share_a_kernel():
+    """Row bucketing pins nearby batch sizes to one padded shape, so the
+    per-B recompile the fused round would otherwise trigger (L+1 rows
+    for one request, S*(L+1) for a fused arena) never happens."""
+    from repro.kernels.gls_race.kernel import _row_race_tiling
+    tile5, rb5, pad5 = _row_race_tiling(5, 8, 128, 2048)
+    tile7, rb7, pad7 = _row_race_tiling(7, 8, 128, 2048)
+    assert tile5 == tile7 == 128          # vocab tile fits the vocab
+    assert pad5 == pad7                   # one compiled kernel for both
+    assert rb5 == rb7
 
 
 def test_gls_race_zero_prob_symbols_never_win():
@@ -119,6 +157,50 @@ def test_decode_attention_single_valid_token():
     # With one valid token, output == v[:, :, 0] broadcast over groups.
     np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(v[0, 0, 0]),
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Slot-aware decode path through the decode-attention kernel
+# ---------------------------------------------------------------------------
+
+
+def test_decode_step_slots_use_kernel_matches_dense_path():
+    """The Pallas decode-attention kernel behind ``use_kernel`` must be
+    numerically equivalent (online-softmax reduction order — allclose,
+    not bit-equal) to the dense slot-aware decode, per-row positions
+    included."""
+    from repro.models import ModelConfig, init_cache, init_params
+    from repro.models.transformer import decode_step_slots
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=64, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b, t = 6, 32
+    cache = init_cache(cfg, b, t)
+    cache = {"k": jax.random.normal(jax.random.PRNGKey(1),
+                                    cache["k"].shape),
+             "v": jax.random.normal(jax.random.PRNGKey(2),
+                                    cache["v"].shape)}
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (b, 1), 0, 64)
+    pos = jnp.asarray([0, 3, 7, 12, 25, 31], jnp.int32)  # per-row ragged
+
+    ref_logits, ref_cache = decode_step_slots(params, cfg, tokens, cache,
+                                              pos)
+    ker_logits, ker_cache = decode_step_slots(params, cfg, tokens, cache,
+                                              pos, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(ker_logits),
+                               np.asarray(ref_logits), atol=2e-5,
+                               rtol=2e-5)
+    # Deeper layers' K/V projections consume earlier layers' attention
+    # outputs, so caches inherit the kernel's reduction-order ulps —
+    # equivalent, not bit-equal.
+    np.testing.assert_allclose(np.asarray(ker_cache["k"]),
+                               np.asarray(ref_cache["k"]), atol=2e-5,
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(ker_cache["v"]),
+                               np.asarray(ref_cache["v"]), atol=2e-5,
+                               rtol=2e-5)
 
 
 # ---------------------------------------------------------------------------
