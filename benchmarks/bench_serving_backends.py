@@ -1,7 +1,7 @@
-"""Serving-path benchmark: fused verification backends and the batched
-scheduler.
+"""Serving-path benchmark: fused verification backends, the batched
+scheduler, and bursty admission.
 
-Two comparisons the serving refactor is accountable for:
+Three comparisons the serving refactor is accountable for:
 
   * verifier backends — "legacy" (per-token host loop, 2 syncs/token) vs
     "xla" (one jitted block) vs "pallas" (block race through the
@@ -17,7 +17,19 @@ Two comparisons the serving refactor is accountable for:
     output-equality checks (all paths must be bit-identical to the
     sequential reference mode).  CI gates on
     ``kv_fused_speedup_vs_kv >= 1`` — a fused round slower than the
-    host-driven round is a regression.
+    host-driven round is a regression;
+  * admission paths (DESIGN.md §9) — a bursty wave of queued requests
+    with MIXED prompt lengths admitted ``per_request`` (2 host-driven
+    prefill dispatches per request, one jit shape per observed prompt
+    length) vs ``bucketed`` (prompts bucket into powers of two and
+    prefill straight into pool slots, one stacked dispatch per bucket
+    per model, overlapped with the running kv_fused round): per-request
+    ``ttft_ms``, mean-TTFT improvement, prefill dispatch counts, and a
+    bit-identity check.  Both runs are measured against a warmed engine
+    whose warm corpus uses DIFFERENT prompt lengths — the bucketed
+    path's compile set is the bucket set so it arrives warm, while the
+    per-request path re-compiles per fresh length, which is exactly the
+    production TTFT story this bench exists to track.
 
 ``collect()`` returns the JSON payload CI archives as BENCH_specdec.json.
 """
@@ -40,6 +52,63 @@ from repro.specdec import (
 L = 4
 MAX_NEW = 32
 SCHED_BATCH = 4   # R: live requests per round in the scheduler bench
+
+# Bursty-admission scenario: >= 8 queued requests, mixed prompt lengths
+# straddling the admission buckets.  Warm lengths deliberately differ
+# from measured lengths while hitting the same buckets.
+ADMIT_BATCH = 8
+ADMIT_LENS_WARM = (5, 23, 14, 37, 9, 18, 29, 47, 7, 26, 12, 41)
+ADMIT_LENS_MEAS = (6, 24, 15, 38, 10, 19, 30, 46, 8, 27, 13, 40)
+
+
+def _mixed_prompts(lens):
+    base = bench_prompts(len(lens), length=max(lens) + 1)
+    return [p[:n] for p, n in zip(base, lens)]
+
+
+def _bench_admission(target, drafter, *, max_new=MAX_NEW):
+    """Bursty-admission TTFT: per_request vs bucketed admission under
+    cache_mode="kv_fused".  Returns per-request ttft_ms, means, prefill
+    dispatch counts, and the bit-identity verdict."""
+    sd = SpecDecConfig(num_drafts=4, draft_len=L, strategy="gls",
+                       top_k=50, max_new_tokens=max_new)
+    out = {}
+    outputs = {}
+    for admission in ("per_request", "bucketed"):
+        eng = CachedSpecDecEngine(target, drafter, sd,
+                                  pool_slots=ADMIT_BATCH)
+
+        def serve(corpus):
+            srv = SpecDecServer(eng, max_batch=ADMIT_BATCH,
+                                cache_mode="kv_fused", admission=admission)
+            for p in corpus:
+                srv.submit(p, max_new=max_new)
+            done = srv.run(jax.random.PRNGKey(11))
+            return srv, done
+
+        # Warm pass: compiles the fused round and this policy's prefill
+        # shapes for the WARM lengths; the measured lengths are fresh,
+        # so per_request pays its per-length compiles here and bucketed
+        # does not (its shapes are the bucket set).
+        serve(_mixed_prompts(ADMIT_LENS_WARM))
+        pd0 = eng.num_prefill_dispatches
+        srv, done = serve(_mixed_prompts(ADMIT_LENS_MEAS))
+        ttfts = {r.uid: r.ttft_ms for r in done}
+        out[admission] = {
+            "mean_ttft_ms": float(np.mean(list(ttfts.values()))),
+            "max_ttft_ms": float(np.max(list(ttfts.values()))),
+            "ttft_ms": {str(u): float(v) for u, v in sorted(ttfts.items())},
+            "tokens_per_s": srv.metrics.tokens_per_s,
+            "prefill_dispatches": eng.num_prefill_dispatches - pd0,
+        }
+        outputs[admission] = {r.uid: list(r.output) for r in done}
+    out["queued_requests"] = len(ADMIT_LENS_MEAS)
+    out["prompt_lens"] = list(ADMIT_LENS_MEAS)
+    out["bit_identical"] = outputs["bucketed"] == outputs["per_request"]
+    out["ttft_improvement"] = (
+        out["per_request"]["mean_ttft_ms"]
+        / max(out["bucketed"]["mean_ttft_ms"], 1e-9))
+    return out
 
 
 def _bench_backends(*, k=8, max_new=MAX_NEW, n_prompts=3):
@@ -124,6 +193,7 @@ def collect(fast: bool = True):
         "strategies": strategies,
         "verifier_backends": _bench_backends(max_new=max_new),
         "scheduler": _bench_scheduler(target, drafter, max_new=max_new),
+        "admission": _bench_admission(target, drafter, max_new=max_new),
     }
 
 
@@ -148,6 +218,17 @@ def run(fast: bool = False):
          f"{sched['kv_speedup_vs_reprefill']:.2f}x")
     emit("scheduler_kv_fused_speedup_vs_kv", 0.0,
          f"{sched['kv_fused_speedup_vs_kv']:.2f}x")
+    adm = payload["admission"]
+    for pol in ("per_request", "bucketed"):
+        a = adm[pol]
+        emit(f"admission_{pol}", a["mean_ttft_ms"] * 1e3,
+             f"mean_ttft_ms={a['mean_ttft_ms']:.1f};"
+             f"max_ttft_ms={a['max_ttft_ms']:.1f};"
+             f"tok_s={a['tokens_per_s']:.1f};"
+             f"prefill_dispatches={a['prefill_dispatches']}")
+    emit("admission_bit_identical", 0.0, str(adm["bit_identical"]))
+    emit("admission_ttft_improvement", 0.0,
+         f"{adm['ttft_improvement']:.2f}x")
     return payload
 
 

@@ -33,6 +33,12 @@ def _measure(target, drafter, prompts, strategy, k, *, backend="xla",
         SpecDecConfig(num_drafts=kk, draft_len=L, strategy=strategy,
                       top_k=50, max_new_tokens=max_new,
                       verifier_backend=backend))
+    # Warm the jit caches at the measured buffer shape before timing —
+    # whichever (strategy, K) ran first used to absorb the whole
+    # process's XLA compile time and report ~2x-low tokens/s (the "gls
+    # lag": gls leads the strategy loop).
+    eng.gen_block(jax.random.PRNGKey(0), prompts[0],
+                  len(prompts[0]) + max_new + L + 2)
     t0 = time.perf_counter()
     stats = [eng.generate(jax.random.PRNGKey(100 + i), p)
              for i, p in enumerate(prompts)]

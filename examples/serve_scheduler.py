@@ -82,7 +82,8 @@ def main():
         for r in done:
             lat = (r.t_done - r.t_submit)
             print(f"req {r.uid}: {len(r.output)} tokens, "
-                  f"BE={r.block_efficiency:.2f}, latency={lat:.1f}s")
+                  f"BE={r.block_efficiency:.2f}, ttft={r.ttft_ms:.0f}ms, "
+                  f"latency={lat:.1f}s")
         m = server.metrics
         print(f"throughput: {m.tokens_per_s:.1f} tok/s  "
               f"mean BE: {m.mean_block_efficiency:.2f}  "

@@ -1,5 +1,5 @@
 """Pallas TPU flash-attention (prefill) kernel with GQA, causal and
-sliding-window masking.
+sliding-window masking, and per-row offsets for cache-arena prefill.
 
 Tiling: grid (B, H, S/TQ, T/TK); online-softmax carry (m, l, acc) lives in
 VMEM scratch across the sequential KV-tile axis.  Block shapes keep the
@@ -7,6 +7,13 @@ MXU busy (TQ x D and TK x D tiles, lane dim = head_dim, sublane = seq) and
 the working set ~ (TQ + 2*TK) * D * 4B well under VMEM.  KV heads are
 indexed as h // group so grouped query heads reuse the same KV tiles
 (no repeated-KV materialization in HBM).
+
+Arena prefill (DESIGN.md §9): each batch row may sit at its own decode
+position, so the kernel takes per-row ``q_offset`` (position of the
+row's first query) and ``kv_len`` (valid KV prefix length) as SMEM
+scalars — the same per-row masking contract as the dense
+``layers.attention`` path and the decode-attention kernel.  Rows whose
+queries are entirely masked (bucket padding) emit zeros, not NaN.
 """
 
 from __future__ import annotations
@@ -22,9 +29,9 @@ DEFAULT_TQ = 256
 DEFAULT_TK = 256
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            tq: int, tk: int, n_kv: int, causal: bool, window: int,
-            t_real: int):
+def _kernel(q_off_ref, kv_len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, tq: int, tk: int, n_kv: int,
+            causal: bool, window: int, t_real: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -38,12 +45,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     k = k_ref[0, 0].astype(jnp.float32)      # (TK, D)
     v = v_ref[0, 0].astype(jnp.float32)
     d = q.shape[-1]
+    q_off = q_off_ref[0]
+    kv_len = kv_len_ref[0]
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
         jnp.float32(d))
-    q_pos = iq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    q_pos = q_off + iq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
     k_pos = ik * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
-    mask = k_pos < t_real
+    mask = (k_pos < t_real) & (k_pos < kv_len)
     if causal:
         mask &= k_pos <= q_pos
     if window:
@@ -63,17 +72,25 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ik == n_kv - 1)
     def _emit():
+        # Fully-masked query rows (bucket padding) have l == 0; the
+        # 1e-30 floor turns them into zeros rather than NaN.
         denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "tq", "tk",
                                              "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_offset: jax.Array = None, kv_len: jax.Array = None, *,
                     causal: bool = True, window: int = 0,
                     tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
                     interpret: bool = True) -> jax.Array:
-    """q: (B, H, S, D); k/v: (B, Hkv, T, D) -> (B, H, S, D)."""
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D) -> (B, H, S, D).
+
+    ``q_offset``/``kv_len`` are optional (B,) i32 per-row masks: row b's
+    queries sit at positions ``q_offset[b] + arange(S)`` and attend only
+    keys below ``kv_len[b]`` (defaults: offset 0, full T).
+    """
     b, h, s, d = q.shape
     hkv, t = k.shape[1], k.shape[2]
     g = h // hkv
@@ -88,6 +105,12 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
     s_pad, t_pad = q.shape[2], k.shape[2]
     n_q, n_kv = s_pad // tq, t_pad // tk
+    if q_offset is None:
+        q_offset = jnp.zeros((b,), jnp.int32)
+    if kv_len is None:
+        kv_len = jnp.full((b,), t, jnp.int32)
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
 
     kernel = functools.partial(_kernel, tq=tq, tk=tk, n_kv=n_kv,
                                causal=causal, window=window, t_real=t)
@@ -95,6 +118,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         kernel,
         grid=(b, h, n_q, n_kv),
         in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, iq, ik: (b_,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b_, h_, iq, ik: (b_,),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, tq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
             pl.BlockSpec((1, 1, tk, d),
                          lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
@@ -110,5 +137,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((tq, d), jnp.float32),   # running numerator acc
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q_offset, kv_len, q, k, v)
     return out[:, :, :s]

@@ -10,10 +10,11 @@ from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
-def flash_attention_op(q, k, v, *, causal=True, window=0,
-                       use_kernel: bool = True, interpret: bool = True):
+def flash_attention_op(q, k, v, q_offset=None, kv_len=None, *, causal=True,
+                       window=0, use_kernel: bool = True,
+                       interpret: bool = True):
     if use_kernel:
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               interpret=interpret)
+        return flash_attention(q, k, v, q_offset, kv_len, causal=causal,
+                               window=window, interpret=interpret)
     fn = functools.partial(flash_attention_ref, causal=causal, window=window)
-    return jax.jit(fn)(q, k, v)
+    return jax.jit(fn)(q, k, v, q_offset, kv_len)

@@ -1,29 +1,40 @@
 """Pure-jnp oracle for the flash-attention prefill kernel: exact GQA
-attention with causal and sliding-window masking."""
+attention with causal, sliding-window, and per-row offset masking."""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_offset: Optional[jax.Array] = None,
+                        kv_len: Optional[jax.Array] = None, *,
                         causal: bool = True, window: int = 0) -> jax.Array:
-    """q: (B, H, S, D); k/v: (B, Hkv, T, D).  f32 math, returns q.dtype."""
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D).  f32 math, returns q.dtype.
+
+    ``q_offset``/``kv_len``: optional (B,) i32 per-row masks mirroring
+    the kernel's arena-prefill contract (defaults: offset 0, full T)."""
     b, h, s, d = q.shape
     hkv, t = k.shape[1], k.shape[2]
     g = h // hkv
     qr = q.reshape(b, hkv, g, s, d).astype(jnp.float32)
     scores = jnp.einsum("bhgsd,bhtd->bhgst", qr, k.astype(jnp.float32))
     scores = scores / jnp.sqrt(d)
-    q_pos = jnp.arange(s)
+    q_off = (jnp.zeros((b,), jnp.int32) if q_offset is None
+             else jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,)))
+    kvl = (jnp.full((b,), t, jnp.int32) if kv_len is None
+           else jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,)))
+    q_pos = q_off[:, None] + jnp.arange(s)                  # (B, S)
     k_pos = jnp.arange(t)
-    mask = jnp.ones((s, t), bool)
+    mask = k_pos[None, None, :] < kvl[:, None, None]        # (B, S, T)
     if causal:
-        mask &= k_pos[None, :] <= q_pos[:, None]
+        mask &= k_pos[None, None, :] <= q_pos[:, :, None]
     if window:
-        mask &= k_pos[None, :] > q_pos[:, None] - window
-    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     w = jnp.where(jnp.isnan(w), 0.0, w)
     out = jnp.einsum("bhgst,bhtd->bhgsd", w, v.astype(jnp.float32))

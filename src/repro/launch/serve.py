@@ -49,6 +49,18 @@ def main():
     ap.add_argument("--batched", action="store_true",
                     help="stack live requests into one target forward "
                          "per round (reprefill mode; kv always batches)")
+    ap.add_argument("--admission", default="bucketed",
+                    choices=("bucketed", "per_request"),
+                    help="bucketed: batched admission — prompts prefill "
+                         "straight into pool slots, one stacked dispatch "
+                         "per length bucket per model, overlapped with "
+                         "the running round under kv_fused (DESIGN.md "
+                         "§9); per_request: the 2-dispatches-per-request "
+                         "reference path")
+    ap.add_argument("--prefill-kernel", action="store_true",
+                    help="route admission prefill chunks through the "
+                         "flash-attention Pallas kernel (numerically "
+                         "equivalent, not bit-equal)")
     args = ap.parse_args()
     if args.cache_mode == "kv_fused" and args.backend == "legacy":
         ap.error("--cache-mode kv_fused needs a device verifier backend "
@@ -70,7 +82,8 @@ def main():
     cfg = SpecDecConfig(num_drafts=k, draft_len=args.draft_len,
                         strategy=args.strategy, top_k=50,
                         max_new_tokens=args.max_new,
-                        verifier_backend=args.backend)
+                        verifier_backend=args.backend,
+                        prefill_kernel=args.prefill_kernel)
     if args.cache_mode in ("kv", "kv_fused"):
         eng = CachedSpecDecEngine(target, drafter, cfg,
                                   pool_slots=args.max_batch)
@@ -78,15 +91,20 @@ def main():
         eng = SpecDecEngine(target, [drafter], cfg)
     server = SpecDecServer(eng, max_batch=args.max_batch,
                            batched=args.batched,
-                           cache_mode=args.cache_mode)
+                           cache_mode=args.cache_mode,
+                           admission=args.admission)
     for p in bench_prompts(args.requests):
         server.submit(p, max_new=args.max_new)
     done = server.run(jax.random.PRNGKey(0))
     m = server.metrics
     be = float(np.mean([r.block_efficiency for r in done]))
+    ttft = float(np.mean([r.ttft_ms for r in done]))
+    pd = getattr(eng, "num_prefill_dispatches", 0)
     print(f"strategy={args.strategy} K={k} L={args.draft_len} "
           f"backend={args.backend} cache_mode={args.cache_mode} "
+          f"admission={args.admission} "
           f"BE={be:.2f} tok/s={m.tokens_per_s:.1f} "
+          f"mean-ttft={ttft:.1f}ms prefill-dispatches={pd} "
           f"rounds={m.rounds} target-forwards={m.target_forwards} "
           f"verify-syncs={m.host_syncs} draft-syncs={m.draft_syncs} "
           f"over {len(done)} requests")

@@ -12,13 +12,18 @@ from repro.models.registry import (
     prefill,
 )
 
-from repro.models.transformer import decode_step_slots, verify_step_slots
+from repro.models.transformer import (
+    decode_step_slots,
+    prefill_slots,
+    verify_step_slots,
+)
 
 __all__ = [
     "CachePool",
     "ModelConfig",
     "decode_step",
     "decode_step_slots",
+    "prefill_slots",
     "verify_step_slots",
     "family_module",
     "forward",

@@ -30,9 +30,12 @@ Positions live in TWO places (DESIGN.md §8): the host mirror
 (``pool.pos``) is authoritative for admission/allocation and sizing
 decisions, and a lazily materialized device copy (``pos_device()``)
 feeds the fused round program, which advances positions in-program and
-hands back the updated array (``adopt_round``).  Host-side lifecycle
-writes (alloc/release/prefill) invalidate the device copy; the fused
-round refreshes the host mirror from its packed result, so the two
+hands back the updated array (``adopt_round_device``).  Host-side
+lifecycle writes (alloc/release/prefill) update the device copy
+PER SLOT (``_touch_pos`` — one ``.at[slot].set`` element write), so
+admitting or releasing one request never re-uploads every live slot's
+positions; the fused round refreshes the host mirror for the slots it
+advanced from its packed result (``refresh_pos_host``), so the two
 views never drift.
 """
 
@@ -104,14 +107,20 @@ class CachePool:
         slot = min(self._free)
         self._free.remove(slot)
         self.pos[slot] = 0
-        self._pos_dev = None
+        self._touch_pos(slot)
         return slot
 
     def release(self, slot: int) -> None:
         assert 0 <= slot < self.num_slots and slot not in self._free
         self.pos[slot] = 0
-        self._pos_dev = None
+        self._touch_pos(slot)
         self._free.append(slot)
+
+    def set_pos(self, slot: int, pos: int) -> None:
+        """Record a slot's new decode position (host mirror + per-slot
+        device touch) — the host-driven round's position write."""
+        self.pos[slot] = int(pos)
+        self._touch_pos(slot)
 
     def rows_of(self, slot: int) -> np.ndarray:
         r = self.rows_per_slot
@@ -144,7 +153,7 @@ class CachePool:
         self.caches[name] = {kk: _scatter_rows(arena[kk], cache[kk], r0=r0)
                              for kk in ("k", "v")}
         self.pos[slot] = pos
-        self._pos_dev = None
+        self._touch_pos(slot)
 
     def update(self, name: str, cache: dict) -> None:
         """Adopt the arena returned by a slots model call."""
@@ -162,26 +171,46 @@ class CachePool:
                                  for kk in ("k", "v")}
 
     # -- fused-round device state (DESIGN.md §8) ---------------------------
+    def _touch_pos(self, slot: int) -> None:
+        """Per-slot device-position update after a host lifecycle write:
+        one ``.at[slot].set`` element write instead of invalidating (and
+        re-uploading) the whole position array.  No-op while the device
+        copy has never been materialized."""
+        if self._pos_dev is not None:
+            self._pos_dev = self._pos_dev.at[slot].set(
+                jnp.int32(int(self.pos[slot])))
+
     def pos_device(self) -> jax.Array:
         """(num_slots,) i32 device positions for the fused round program.
-        Rebuilt from the host mirror after lifecycle writes; otherwise
-        the array handed back by the previous round is reused, so the
-        steady-state round uploads nothing."""
+        Materialized from the host mirror once; afterwards the array
+        handed back by the previous round (plus per-slot lifecycle
+        touches) is reused, so the steady-state round uploads nothing."""
         if self._pos_dev is None:
             self._pos_dev = jnp.asarray(self.pos, jnp.int32)
         return self._pos_dev
 
-    def adopt_round(self, caches: Dict[str, dict], pos_dev: jax.Array,
-                    pos_host: np.ndarray) -> None:
-        """Adopt a fused round program's outputs: the per-model {k, v}
-        arenas (the donated input buffers are dead — callers must never
-        touch them again), the advanced device positions, and the host
-        mirror decoded from the round's packed result."""
+    def adopt_round_device(self, caches: Dict[str, dict],
+                           pos_dev: jax.Array) -> None:
+        """Adopt a fused round program's DEVICE outputs: the per-model
+        {k, v} arenas (the donated input buffers are dead — callers must
+        never touch them again) and the advanced device positions.
+        Deliberately host-async: callers may dispatch more device work
+        (admission prefills, §9) against the adopted arrays before the
+        round's packed result is fetched; the host mirror stays stale
+        for the advanced slots until ``refresh_pos_host``."""
         assert set(caches) == set(self.caches)
         for name, c in caches.items():
             self.caches[name] = {"k": c["k"], "v": c["v"]}
         self._pos_dev = pos_dev
-        self.pos[:] = np.asarray(pos_host, np.int64)
+
+    def refresh_pos_host(self, pos_host: np.ndarray, slots) -> None:
+        """Refresh the host position mirror for ``slots`` from a fused
+        round's packed result.  Only the slots the round advanced are
+        written — slots admitted while the round ran already hold their
+        post-prefill positions host-side, and the round's packed ``pos``
+        (snapshotted at dispatch) would clobber them."""
+        for s in slots:
+            self.pos[s] = int(pos_host[s])
 
     def row_positions(self, default: int = 0) -> np.ndarray:
         """(num_slots * rows_per_slot,) per-row positions for the slots

@@ -116,12 +116,19 @@ def attention(
     batch row sits at its own decode position (DESIGN.md §7); the scalar
     path computes the identical masked scores it always did.
 
-    ``use_kernel`` routes the single-query decode case (s == 1,
-    non-causal, windowless, ``kv_len``-masked — exactly the slot-aware
-    decode step) through the ``kernels/decode_attention`` Pallas kernel:
-    an online-softmax stream over KV tiles, numerically equivalent to
-    the dense path but not bit-equal (different reduction order), so it
-    stays opt-in where bit-identity contracts apply.
+    ``use_kernel`` routes two cases through Pallas:
+
+      * the single-query decode case (s == 1, non-causal, windowless,
+        ``kv_len``-masked — exactly the slot-aware decode step) through
+        the ``kernels/decode_attention`` kernel;
+      * the causal multi-token case (s > 1, windowless, with per-row
+        ``q_offset``/``kv_len`` arena masks — the admission prefill
+        chunks of ``transformer.prefill_slots``) through the
+        ``kernels/flash_attention`` kernel.
+
+    Both are online-softmax streams over KV tiles, numerically
+    equivalent to the dense path but not bit-equal (different reduction
+    order), so they stay opt-in where bit-identity contracts apply.
     """
     b, h, s, d = q.shape
     if (use_kernel and s == 1 and not causal and not window
@@ -131,6 +138,14 @@ def attention(
         out = decode_attention_op(q[:, :, 0], k, v, kvl,
                                   interpret=interpret)
         return out[:, :, None, :]
+    if use_kernel and s > 1 and causal and not window:
+        from repro.kernels.flash_attention.ops import flash_attention_op
+        qo = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
+                              (b,))
+        kvl = (None if kv_len is None else jnp.broadcast_to(
+            jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,)))
+        return flash_attention_op(q, k, v, qo, kvl, causal=True,
+                                  interpret=interpret)
     hkv = k.shape[1]
     g = h // hkv
     q = q.reshape(b, hkv, g, s, d)

@@ -212,6 +212,84 @@ def _rowwise_cache_write(cache_k, cache_v, k, v, starts):
             jax.vmap(upd)(cache_v, v, starts))
 
 
+def _rowwise_cache_write_masked(cache_k, cache_v, k, v, starts, write):
+    """Row-offset cache write that can skip rows: rows where ``write`` is
+    False scatter to index T (out of bounds, ``mode="drop"``) so their
+    cache content is untouched bit-for-bit.  Written rows land exactly
+    where ``_rowwise_cache_write`` would put them.  cache_k/v:
+    (B, H, T, hd); k/v: (B, H, m, hd); starts: (B,) i32; write: (B,)
+    bool.  Chunk tails running past T (bucket padding near the buffer
+    end) drop the same way."""
+    t = cache_k.shape[2]
+    m = k.shape[2]
+
+    def upd(c, kk, p, w):
+        idx = jnp.where(w, p + jnp.arange(m), t)   # t == OOB -> dropped
+        return c.at[:, idx].set(kk, mode="drop")
+
+    return (jax.vmap(upd)(cache_k, k, starts, write),
+            jax.vmap(upd)(cache_v, v, starts, write))
+
+
+def _block_prefill_slots(params_l, carry, cache_l, cfg: ModelConfig,
+                         write, use_kernel: bool, interpret: bool):
+    """Prompt-chunk prefill with per-row start positions, straight into a
+    cache arena (the batched admission step, DESIGN.md §9).  Identical
+    attention structure to ``_block_verify_slots`` — causal over the
+    row's own cache prefix plus the freshly written chunk — with two
+    differences: rows outside the admission wave are write-masked, and
+    ``use_kernel`` routes the chunk attention through the
+    ``kernels/flash_attention`` Pallas kernel."""
+    x, pos = carry  # x: (B, m, D); pos: (B,) per-row chunk start position
+    p = params_l["attn"]
+    hd = cfg.resolved_head_dim
+    b, m, _ = x.shape
+    xin = L.rmsnorm(params_l["attn_norm"], x, cfg.norm_eps)
+    q, k, v = L.project_qkv(p, xin, cfg.num_heads, cfg.kv_heads, hd)
+    positions = pos[:, None, None] + jnp.arange(m, dtype=jnp.int32)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    new_k, new_v = _rowwise_cache_write_masked(cache_l["k"], cache_l["v"],
+                                               k, v, pos, write)
+    out = L.attention(q, new_k, new_v, causal=True, q_offset=pos,
+                      kv_len=pos + m, use_kernel=use_kernel,
+                      interpret=interpret)
+    x = x + L.project_out(p, out)
+    x = x + L.swiglu(params_l["mlp"],
+                     L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
+    return (x, pos), {"k": new_k, "v": new_v}
+
+
+def prefill_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  cache: dict, pos: jax.Array,
+                  write: Optional[jax.Array] = None, *,
+                  use_kernel: bool = False, interpret: bool = True) -> dict:
+    """Device-side admission prefill: tokens (B, m) prompt chunks land
+    directly in their arena rows at per-row offsets ``pos`` (B,) —
+    no temporary cache, no host scatter (DESIGN.md §9).  Returns the new
+    {k, v} arena; NO logits are computed (the lm_head matmul is the
+    single largest flop term of a small-model admission and its output
+    is discarded — the last prompt token stays *pending* and is scored
+    by the first round's verify chunk instead).
+
+    ``write`` (B,) bool masks rows outside the admission wave: their
+    cache rows are bit-untouched and their (garbage) activations are
+    discarded.  Rows shorter than the chunk are padded by the caller;
+    pad KV lands above the row's live prefix, where every consumer
+    overwrites before attending (§9 safety argument).  Non-ring caches
+    only."""
+    assert not cfg.sliding_window, "prefill_slots: non-ring caches only"
+    x = params["embed"][tokens]
+    if write is None:
+        write = jnp.ones((tokens.shape[0],), bool)
+    fn = functools.partial(_block_prefill_slots, cfg=cfg, write=write,
+                           use_kernel=use_kernel, interpret=interpret)
+    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    (_, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
+                                    cache=layer_cache)
+    return {"k": new_cache["k"], "v": new_cache["v"]}
+
+
 def _block_decode_slots(params_l, carry, cache_l, cfg: ModelConfig,
                         use_kernel: bool = False, interpret: bool = True):
     """Single-token decode where every batch row sits at its own position

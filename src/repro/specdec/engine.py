@@ -30,6 +30,7 @@ Design notes
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -64,6 +65,11 @@ class SpecDecConfig:
     # but NOT bit-equal to the dense path (online-softmax reduction
     # order), so it defaults off wherever bit-identity contracts apply.
     decode_kernel: bool = False
+    # Route the cached engine's admission prefill chunks through the
+    # kernels/flash_attention Pallas kernel (the causal multi-token
+    # use_kernel route of layers.attention).  Same opt-in contract as
+    # decode_kernel: numerically equivalent, not bit-equal.
+    prefill_kernel: bool = False
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -129,6 +135,20 @@ def block_randomness(sub: jax.Array, draft_len: int, num_drafts: int,
     return log_u, jax.random.split(k_strat, draft_len + 1)
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_buffer_forward(mcfg: ModelConfig):
+    """Process-wide jitted buffer forward, one per ModelConfig (frozen,
+    hashable).  Engines used to hold per-instance jit closures, so every
+    fresh engine re-traced and re-compiled identical forwards — in the
+    strategy benchmarks that billed several seconds of XLA compile time
+    to whichever strategy happened to run first (the 2x "gls lag" of
+    BENCH_specdec.json).  jax.jit's shape-keyed cache on a shared
+    callable makes engine construction compile-free after the first."""
+    def f(p, t):
+        return forward(p, mcfg, {"tokens": t}, remat=False)
+    return jax.jit(f)
+
+
 class SpecDecEngine:
     """Speculative decoding over one target and K (possibly distinct)
     drafters sharing the target's vocabulary."""
@@ -142,7 +162,6 @@ class SpecDecEngine:
         assert len(self.drafters) == cfg.num_drafts
         self.cfg = cfg
         self.vocab = self.t_cfg.vocab_size
-        self._fwd_cache = {}
         self._homogeneous = (
             all(d is self.drafters[0] for d in self.drafters)
             and len(set(cfg.temps)) == 1)
@@ -155,12 +174,7 @@ class SpecDecEngine:
 
     # -- jitted, shape-stable model calls ---------------------------------
     def _buffer_forward(self, params, mcfg: ModelConfig, tokens: jax.Array):
-        key = (id(params), tokens.shape)
-        if key not in self._fwd_cache:
-            def f(p, t):
-                return forward(p, mcfg, {"tokens": t}, remat=False)
-            self._fwd_cache[key] = jax.jit(f)
-        return self._fwd_cache[key](params, tokens)
+        return _jitted_buffer_forward(mcfg)(params, tokens)
 
     # -- shared drafting / scoring core (R requests stacked) ---------------
     def _block_randomness(self, sub: jax.Array):

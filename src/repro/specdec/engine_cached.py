@@ -51,6 +51,22 @@ device->host transfer per round is the packed result fetch
 (``draft_syncs == 0``, one ``host_sync`` per round).  Token streams are
 bit-identical to the host-driven path for every strategy and device
 verifier backend.
+
+Admission (DESIGN.md §9): ``admit_batch`` drains an admission wave into
+power-of-two length buckets and issues ONE stacked ``prefill_slots``
+dispatch per bucket per model — prompts land directly in their arena
+rows on device (no temporary cache, no host scatter), rows outside the
+wave are write-masked, bucket padding rides the §9 dead-zone argument,
+and prompts longer than the largest bucket chunk through repeated
+calls, so compile count is bounded by the bucket set rather than by
+observed prompt lengths.  ``round_with_admission`` additionally
+OVERLAPS admission with decoding: the fused round is dispatched first,
+the admission prefills are dispatched against its output arenas, and
+only then does the host block on the round's packed fetch — the
+admitted sessions join the live set next round.  Both admission paths
+produce bit-identical caches to per-request ``admit``
+(tests/test_admission.py); ``batched_admission=False`` keeps the
+per-request path for reference benchmarking.
 """
 
 from __future__ import annotations
@@ -67,6 +83,7 @@ from repro.models import (
     decode_step_slots,
     init_cache,
     prefill,
+    prefill_slots,
     verify_step_slots,
 )
 from repro.specdec import verify as V
@@ -82,6 +99,39 @@ from repro.specdec.engine import (
     block_randomness,
     probs_from_logits,
 )
+
+
+_MIN_BUCKET = 16
+
+
+def _max_bucket(buf_len: int) -> int:
+    """Largest admission bucket: the largest power of two <= buf_len
+    (floored at _MIN_BUCKET for tiny test arenas — oversized chunks are
+    safe, their pad writes drop at the buffer edge)."""
+    b = _MIN_BUCKET
+    while b * 2 <= buf_len:
+        b *= 2
+    return b
+
+
+def _bucket_plan(n: int, max_bucket: int) -> list:
+    """Chunk an n-token prefill into the power-of-two bucket set:
+    ``[(offset, length, bucket), ...]``.  Full ``max_bucket`` chunks
+    first, then the remainder in the smallest bucket that holds it —
+    so the set of compiled prefill shapes is the bucket set, not the
+    set of observed prompt lengths (DESIGN.md §9)."""
+    chunks = []
+    off = 0
+    while n - off > max_bucket:
+        chunks.append((off, max_bucket, max_bucket))
+        off += max_bucket
+    rem = n - off
+    if rem > 0:
+        bucket = _MIN_BUCKET
+        while bucket < rem:
+            bucket *= 2
+        chunks.append((off, rem, bucket))
+    return chunks
 
 
 def _select_rollback_row(active: np.ndarray, num_accepted: int) -> int:
@@ -119,7 +169,7 @@ class CachedSpecDecEngine:
     verification strategies route through the shared block verifier."""
 
     def __init__(self, target: tuple, drafter: tuple, cfg: SpecDecConfig,
-                 pool_slots: int = 1):
+                 pool_slots: int = 1, batched_admission: bool = True):
         self.t_params, self.t_cfg = target
         self.d_params, self.d_cfg = drafter
         assert self.t_cfg.family == "dense" and self.d_cfg.family == "dense"
@@ -148,9 +198,33 @@ class CachedSpecDecEngine:
             lambda p, b, c: prefill(p, self.t_cfg, b, c))
         self._d_prefill = jax.jit(
             lambda p, b, c: prefill(p, self.d_cfg, b, c))
+        # Bucketed admission (DESIGN.md §9): stacked arena prefill, one
+        # compile per (model, bucket) — per-request ``admit`` compiles
+        # per observed prompt length instead.  The input arena is
+        # donated like the fused round's (§8 donation contract; CPU
+        # backends don't implement donation and would warn).
+        self.batched_admission = batched_admission
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        self._slot_prefill = {
+            "target": jax.jit(
+                lambda p, t, c, pos, w: prefill_slots(
+                    p, self.t_cfg, t, c, pos, w,
+                    use_kernel=cfg.prefill_kernel,
+                    interpret=cfg.pallas_interpret),
+                donate_argnums=donate),
+            "drafter": jax.jit(
+                lambda p, t, c, pos, w: prefill_slots(
+                    p, self.d_cfg, t, c, pos, w,
+                    use_kernel=cfg.prefill_kernel,
+                    interpret=cfg.pallas_interpret),
+                donate_argnums=donate),
+        }
         # Serving instrumentation (read by the scheduler / benchmarks).
         self.num_target_forwards = 0
         self.num_draft_forwards = 0
+        # Prefill model dispatches spent on admission: 2 per request on
+        # the per-request path, <= 2 x buckets per wave when batched.
+        self.num_prefill_dispatches = 0
         # Device->host transfers spent materializing draft tokens (one
         # per draft step per round, shared across all live requests).
         self.num_draft_syncs = 0
@@ -167,8 +241,11 @@ class CachedSpecDecEngine:
         return self.pool
 
     def admit(self, uid: int, prompt: np.ndarray, buf_len: int) -> int:
-        """Allocate a slot and prefill both models with the prompt minus
-        its last token (which becomes the first pending token)."""
+        """Per-request admission (the reference path): allocate a slot
+        and prefill both models with the prompt minus its last token
+        (which becomes the first pending token) via a temporary K-row
+        cache and a host-driven row scatter.  ``admit_batch`` is the
+        production path — bit-identical caches, bucketed dispatches."""
         assert uid not in self._sessions
         prompt = np.asarray(prompt, np.int32)
         assert len(prompt) >= 1
@@ -183,9 +260,69 @@ class CachedSpecDecEngine:
                                K, pool.buf_len)
             _, cache = fn(params, {"tokens": toks}, cache)
             pool.write_prefill(name, slot, cache, pos=len(prompt) - 1)
+            self.num_prefill_dispatches += 1
         self._sessions[uid] = _Session(uid=uid, slot=slot,
                                        pending=int(prompt[-1]))
         return slot
+
+    def admit_batch(self, pairs, buf_len: int) -> None:
+        """Bucketed batched admission (DESIGN.md §9): admit every
+        ``(uid, prompt)`` in ``pairs`` with prompt KV written straight
+        into the pool arenas on device.
+
+        The wave's prefills drain into power-of-two length buckets
+        (``_bucket_plan``); each (chunk round, bucket) group is ONE
+        stacked ``prefill_slots`` dispatch per model over the whole
+        arena — rows outside the group are write-masked — so a wave
+        costs at most ``2 x buckets`` dispatches per chunk round instead
+        of ``2 x requests``, and the compiled shape set is the bucket
+        set.  Chunk c+1 of a prompt attends chunk c's KV already in the
+        arena, which is what makes repeated calls equal one long
+        prefill."""
+        pairs = [(uid, np.asarray(p, np.int32)) for uid, p in pairs]
+        if not pairs:
+            return
+        pool = self._ensure_pool(buf_len)
+        rows_n = pool.num_slots * self.cfg.num_drafts
+        max_bucket = _max_bucket(pool.buf_len)
+        plans = []
+        for uid, prompt in pairs:
+            assert uid not in self._sessions
+            assert len(prompt) >= 1
+            slot = pool.alloc()
+            self._sessions[uid] = _Session(uid=uid, slot=slot,
+                                           pending=int(prompt[-1]))
+            plans.append((slot, prompt[:-1],
+                          _bucket_plan(len(prompt) - 1, max_bucket)))
+        params = {"target": self.t_params, "drafter": self.d_params}
+        for c in range(max(len(p[2]) for p in plans)):
+            groups = {}
+            for slot, toks, chunks in plans:
+                if c < len(chunks):
+                    groups.setdefault(chunks[c][2], []).append(
+                        (slot, toks, chunks[c]))
+            for bucket in sorted(groups):
+                tok = np.zeros((rows_n, bucket), np.int32)
+                pos = np.zeros((rows_n,), np.int32)
+                write = np.zeros((rows_n,), bool)
+                for slot, toks, (off, ln, _) in groups[bucket]:
+                    rr = pool.rows_of(slot)
+                    tok[rr, :ln] = toks[off:off + ln]
+                    pos[rr] = off
+                    write[rr] = True
+                tok_d, pos_d, write_d = (jnp.asarray(tok), jnp.asarray(pos),
+                                         jnp.asarray(write))
+                for name in ("target", "drafter"):
+                    # Install each chunk's output arena immediately —
+                    # the input buffer is donated, so pool.caches must
+                    # never be left pointing at it (a mid-wave failure
+                    # would otherwise corrupt the pool).
+                    pool.update(name, self._slot_prefill[name](
+                        params[name], tok_d, pool.caches[name], pos_d,
+                        write_d))
+                    self.num_prefill_dispatches += 1
+        for slot, toks, _ in plans:
+            pool.set_pos(slot, len(toks))
 
     def release(self, uid: int) -> None:
         sess = self._sessions.pop(uid)
@@ -289,7 +426,7 @@ class CachedSpecDecEngine:
             k_star = _select_rollback_row(hb.active, a)
             rows = pool.rows_of(sess.slot)
             row_src[rows] = rows[0] + k_star
-            pool.pos[sess.slot] = base_pos[sess.slot] + 1 + a
+            pool.set_pos(sess.slot, base_pos[sess.slot] + 1 + a)
             if a == Lr:
                 # Drafter consumed [pending, d_1..d_{L-1}]: on full
                 # acceptance its cache is one token short — feed Y_L at
@@ -336,8 +473,9 @@ class CachedSpecDecEngine:
         live — liveness is a data-level (S,) mask, and free slots ride
         along as dead rows exactly as they do in the host-driven round.
         Cache arenas and device positions are DONATED (where the backend
-        supports it): callers must adopt the returned buffers via
-        ``CachePool.adopt_round`` and never touch the inputs again.
+        supports it): callers must install the returned buffers via
+        ``CachePool.adopt_round_device`` (then ``refresh_pos_host`` once
+        the packed result lands) and never touch the inputs again.
         """
         cfg, t_cfg, d_cfg = self.cfg, self.t_cfg, self.d_cfg
         K, L, N = cfg.num_drafts, cfg.draft_len, self.vocab
@@ -456,10 +594,17 @@ class CachedSpecDecEngine:
         return jax.jit(round_fn, donate_argnums=donate)
 
     def _block_fused(self, subs: Sequence[jax.Array],
-                     uids: Sequence[int]) -> list:
+                     uids: Sequence[int], admits: Sequence = ()) -> list:
         """Advance every listed session one speculative round as ONE
         device dispatch; the round's only device->host transfer is the
-        packed (tokens, accepted, active, pos) fetch."""
+        packed (tokens, accepted, active, pos) fetch.
+
+        ``admits`` are ``(uid, prompt)`` pairs admitted INSIDE the
+        round's overlap window (DESIGN.md §9): their bucketed prefill
+        dispatches are issued against the round's output arenas after
+        the round is in flight but BEFORE the host blocks on the packed
+        fetch, so admission costs no extra host round-trip and the
+        prompts prefill while the round computes."""
         cfg, pool = self.cfg, self.pool
         K, L, S = cfg.num_drafts, cfg.draft_len, pool.num_slots
         sessions = [self._sessions[u] for u in uids]
@@ -489,9 +634,15 @@ class CachedSpecDecEngine:
         self.num_draft_forwards += L + 1
         self.num_target_forwards += 1
 
+        # Install the round's device outputs and use the in-flight gap
+        # to dispatch this wave's admission prefills (they consume the
+        # round's output arenas, so device execution stays ordered).
+        pool.adopt_round_device({"target": t_kv, "drafter": d_kv}, pos_dev)
+        if admits:
+            self.admit_batch(admits, pool.buf_len)
+
         host = jax.device_get(packed)          # the round's ONE transfer
-        pool.adopt_round({"target": t_kv, "drafter": d_kv}, pos_dev,
-                         host["pos"])
+        pool.refresh_pos_host(host["pos"], [s.slot for s in sessions])
         outs = []
         for i, sess in enumerate(sessions):
             s = sess.slot
@@ -512,25 +663,69 @@ class CachedSpecDecEngine:
         return outs
 
     # -- scheduler contract -------------------------------------------------
+    def _admit_wave(self, pairs, buf_len: int,
+                    admission: Optional[str] = None) -> None:
+        """Admit unseen sessions: one bucketed wave (``admit_batch``) or
+        per-request ``admit``.  ``admission`` overrides the engine's
+        ``batched_admission`` default per call (the scheduler passes its
+        own policy through rather than reconfiguring the engine)."""
+        if admission is None:
+            admission = "bucketed" if self.batched_admission \
+                else "per_request"
+        if admission == "bucketed":
+            self.admit_batch(pairs, buf_len)
+        else:
+            for uid, prompt in pairs:
+                self.admit(uid, prompt, buf_len)
+
+    def round_with_admission(self, subs: Sequence[jax.Array],
+                             uids: Sequence[int], admits: Sequence,
+                             buf_len: int,
+                             tails: Optional[Sequence[int]] = None) -> list:
+        """One kv_fused serving round with overlapped admission (§9):
+        grow the pool for the whole wave, dispatch the fused round for
+        ``uids`` (the already-admitted sessions), dispatch the bucketed
+        admission prefills for ``admits`` while the round runs, and only
+        then block on the round's packed fetch.  Admitted sessions
+        produce no tokens this round — they join the live set next
+        round.  ``tails`` (the caller's last emitted token per uid)
+        enforces the prefix-tail == pending contract that the
+        prefix-carrying ``gen_blocks`` path checks.  Returns
+        ``BlockOutcome``s for ``uids`` only."""
+        self._ensure_pool(buf_len)
+        if tails is not None:
+            for uid, tail in zip(uids, tails):
+                sess = self._sessions[uid]
+                assert int(tail) == sess.pending, (
+                    f"uid {uid}: prefix tail {int(tail)} != cached "
+                    f"pending {sess.pending}")
+        if not uids:
+            self._admit_wave(admits, buf_len, admission="bucketed")
+            return []
+        return self._block_fused(subs, uids, admits=admits)
+
     def gen_blocks(self, subs: Sequence[jax.Array],
                    prefixes: Sequence[np.ndarray], buf_len: int,
                    uids: Optional[Sequence[int]] = None,
-                   fused: bool = False) -> list:
+                   fused: bool = False,
+                   admission: Optional[str] = None) -> list:
         """Advance R requests by one speculative block each (the reference
         engine's scheduler contract, DESIGN.md §1).  With ``uids`` the
         engine serves from persistent slots: unseen uids are admitted
-        (their prefix is prefilled once), known uids continue from their
-        cached state and ``prefixes[i]`` only validates the contract
-        (its last token must equal the session's pending token).
-        Without uids, each call runs against an ephemeral slot.
-        ``fused=True`` runs the round as one device dispatch (§8) —
-        same tokens, 0 draft syncs, 1 host sync per round."""
+        as one bucketed wave (their prefixes prefill straight into the
+        pool arenas, §9; ``admission="per_request"`` keeps the reference
+        path), known uids continue from their cached state and
+        ``prefixes[i]`` only validates the contract (its last token
+        must equal the session's pending token).  Without uids, each
+        call runs against ephemeral slots.  ``fused=True`` runs the
+        round as one device dispatch (§8) — same tokens, 0 draft syncs,
+        1 host sync per round."""
         block = self._block_fused if fused else self._block_cached
         if uids is None:
             ephemeral = [object() for _ in prefixes]
             try:
-                for uid, pre in zip(ephemeral, prefixes):
-                    self.admit(uid, pre, buf_len)
+                self._admit_wave(list(zip(ephemeral, prefixes)), buf_len,
+                                 admission)
                 outs = block(subs, ephemeral)
             finally:
                 for uid in ephemeral:
@@ -538,15 +733,17 @@ class CachedSpecDecEngine:
                         self.release(uid)
             return outs
         self._ensure_pool(buf_len)
+        new = []
         for uid, pre in zip(uids, prefixes):
             pre = np.asarray(pre, np.int32)
             if uid not in self._sessions:
-                self.admit(uid, pre, buf_len)
+                new.append((uid, pre))
             else:
                 sess = self._sessions[uid]
                 assert int(pre[-1]) == sess.pending, (
                     f"uid {uid}: prefix tail {int(pre[-1])} != cached "
                     f"pending {sess.pending}")
+        self._admit_wave(new, buf_len, admission)
         return block(subs, uids)
 
     def gen_block(self, key: jax.Array, prefix: np.ndarray, buf_len: int,
@@ -565,7 +762,7 @@ class CachedSpecDecEngine:
         prompt = np.asarray(prompt, np.int32)
         buf = len(prompt) + max_new + cfg.draft_len + 2
         uid = object()   # private session, never collides with scheduler ids
-        self.admit(uid, prompt, buf)
+        self._admit_wave([(uid, prompt)], buf)
         block = self._block_fused if fused else self._block_cached
         out = []
         blocks = 0

@@ -28,16 +28,31 @@ buffer sizing), so their outputs are bit-identical:
     (``draft_syncs == 0``) and exactly one host sync per round.
 
 RNG streams are derived per request as
-``fold_in(fold_in(round_key, uid), blocks)`` — NESTED folds, because the
+``fold_in(fold_in(key, uid), blocks)`` — NESTED folds, because the
 flat ``fold_in(key, uid * 1000 + blocks)`` encoding collides across
 requests once a request reaches 1000 blocks (uid 1 block 1000 == uid 2
-block 0), silently coupling two requests' draws.
+block 0), silently coupling two requests' draws.  ``run()`` feeds the
+SAME key to every round, so a request's stream depends only on
+(uid, blocks), never on WHICH round a block lands in — that round-
+independence is what lets kv_fused defer a newly admitted request's
+first block to the round after its overlapped prefill (DESIGN.md §9)
+while staying bit-identical to the modes that run it immediately.
+(The former per-round ``fold_in(key, round_idx)`` would have tied
+every block's randomness to the admission policy.)
 
-Buffer lengths grow monotonically to the largest live requirement, so a
-request's compiled shapes — and therefore its sampled tokens — never
-depend on which mode ran it (trailing-buffer content does not affect
-causal logits, but buffer LENGTH changes compiled reduction shapes, so
-it is pinned scheduler-side).
+Admission (``admission="bucketed"``, the default) drains the queue
+into the engine's bucketed batched-prefill waves; under kv_fused the
+wave's prefills are dispatched while the current round runs and the
+admitted requests join the live set next round.  ``per_request`` keeps
+the one-prefill-pair-per-request reference path (the TTFT baseline in
+the bursty-admission bench).
+
+Buffer lengths grow monotonically to the largest live requirement
+(queued requests count from their admission round), so a request's
+compiled shapes — and therefore its sampled tokens — never depend on
+which mode ran it (trailing-buffer content does not affect causal
+logits, but buffer LENGTH changes compiled reduction shapes, so it is
+pinned scheduler-side).
 """
 
 from __future__ import annotations
@@ -74,6 +89,13 @@ class Request:
     def block_efficiency(self) -> float:
         return len(self.output) / max(self.blocks, 1)
 
+    @property
+    def ttft_ms(self) -> Optional[float]:
+        """Time-to-first-token: submission to first emitted tokens."""
+        if self.t_first is None:
+            return None
+        return (self.t_first - self.t_submit) * 1e3
+
 
 @dataclasses.dataclass
 class ServerMetrics:
@@ -100,6 +122,7 @@ class ServerMetrics:
 
 
 CACHE_MODES = ("reprefill", "kv", "kv_fused")
+ADMISSION_MODES = ("bucketed", "per_request")
 
 
 class SpecDecServer:
@@ -113,12 +136,22 @@ class SpecDecServer:
     round is one batched arena step (``batched`` is implied);
     ``cache_mode="kv_fused"`` is the same serving policy with the round
     executed as one fused device program (DESIGN.md §8).
+
+    ``admission`` picks the cached-engine prefill path: "bucketed"
+    (default — batched bucketed waves straight into pool slots,
+    overlapped with the running round under kv_fused, DESIGN.md §9) or
+    "per_request" (the reference path; also the TTFT baseline in the
+    bursty-admission bench).  The policy is passed through to the
+    engine per call, never written onto it.
     """
 
     def __init__(self, engine, max_batch: int = 8,
-                 batched: bool = False, cache_mode: str = "reprefill"):
+                 batched: bool = False, cache_mode: str = "reprefill",
+                 admission: str = "bucketed"):
         if cache_mode not in CACHE_MODES:
             raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        if admission not in ADMISSION_MODES:
+            raise ValueError(f"unknown admission mode {admission!r}")
         if cache_mode in ("kv", "kv_fused"):
             if not hasattr(engine, "admit"):
                 raise TypeError(
@@ -131,6 +164,7 @@ class SpecDecServer:
         self.max_batch = max_batch
         self.batched = batched
         self.cache_mode = cache_mode
+        self.admission = admission
         self.queue: deque = deque()
         self.live: list = []
         self._uid = 0
@@ -144,48 +178,81 @@ class SpecDecServer:
         self.queue.append(req)
         return req.uid
 
-    def _admit(self):
+    def _admit(self) -> list:
+        """Move queued requests into the live set (up to ``max_batch``);
+        returns the newly admitted requests."""
+        newly = []
         while self.queue and len(self.live) < self.max_batch:
-            self.live.append(self.queue.popleft())
+            req = self.queue.popleft()
+            self.live.append(req)
+            newly.append(req)
+        return newly
 
     def _required_buf(self, req: Request) -> int:
         return len(req.prompt) + req.max_new + self.engine.cfg.draft_len + 2
 
     def step(self, key: jax.Array) -> list:
         """Advance every live request by one speculative block.  Returns
-        requests that finished this round."""
+        requests that finished this round.
+
+        Under kv_fused with bucketed admission, requests admitted THIS
+        step only prefill (overlapped with the round advancing the
+        previously admitted requests, DESIGN.md §9) and start emitting
+        tokens next step.  Round-alignment differences between modes
+        are token-invisible because per-request randomness depends only
+        on (uid, blocks) — callers comparing admission policies must
+        pass the same ``key`` every step, as ``run()`` does."""
         t0 = time.perf_counter()
-        self._admit()
+        newly = self._admit()
         if not self.live:
             return []
         self._buf_len = max([self._buf_len]
                             + [self._required_buf(r) for r in self.live])
+        overlap = (self.cache_mode == "kv_fused"
+                   and self.admission == "bucketed")
+        new_ids = {id(r) for r in newly}
+        advancing = [r for r in self.live if id(r) not in new_ids] \
+            if overlap else self.live
         # Nested folds: a flat uid * C + blocks encoding collides across
         # requests once blocks reaches C (see module docstring).
         subs = [jax.random.fold_in(jax.random.fold_in(key, r.uid), r.blocks)
-                for r in self.live]
-        prefixes = [np.concatenate([r.prompt,
-                                    np.asarray(r.output, np.int32)])
-                    for r in self.live]
+                for r in advancing]
         fw0 = self.engine.num_target_forwards
         ds0 = getattr(self.engine, "num_draft_syncs", 0)
-        if self.cache_mode in ("kv", "kv_fused"):
-            outs = self.engine.gen_blocks(
-                subs, prefixes, self._buf_len,
-                uids=[r.uid for r in self.live],
-                fused=self.cache_mode == "kv_fused")
-        elif self.batched:
-            outs = self.engine.gen_blocks(subs, prefixes, self._buf_len)
+        if overlap:
+            # The overlap path skips full-prefix assembly (the engine
+            # serves from cached state) but still hands over each
+            # request's last emitted token so the engine can enforce
+            # the prefix-tail == pending contract loudly.
+            tails = [int(r.output[-1]) if r.output else int(r.prompt[-1])
+                     for r in advancing]
+            outs = self.engine.round_with_admission(
+                subs, [r.uid for r in advancing],
+                [(r.uid, r.prompt) for r in newly], self._buf_len,
+                tails=tails)
         else:
-            outs = [self.engine.gen_block(sub, prefix, self._buf_len)
-                    for sub, prefix in zip(subs, prefixes)]
-        self.metrics.rounds += 1
+            prefixes = [np.concatenate([r.prompt,
+                                        np.asarray(r.output, np.int32)])
+                        for r in advancing]
+            if self.cache_mode in ("kv", "kv_fused"):
+                outs = self.engine.gen_blocks(
+                    subs, prefixes, self._buf_len,
+                    uids=[r.uid for r in advancing],
+                    fused=self.cache_mode == "kv_fused",
+                    admission=self.admission)
+            elif self.batched:
+                outs = self.engine.gen_blocks(subs, prefixes, self._buf_len)
+            else:
+                outs = [self.engine.gen_block(sub, prefix, self._buf_len)
+                        for sub, prefix in zip(subs, prefixes)]
+        if advancing:
+            self.metrics.rounds += 1
         self.metrics.target_forwards += self.engine.num_target_forwards - fw0
         self.metrics.draft_syncs += (
             getattr(self.engine, "num_draft_syncs", 0) - ds0)
 
         finished = []
-        for req, out in zip(self.live, outs):
+        for req, out in zip(advancing, outs):
             req.output.extend(out.new_tokens)
             req.blocks += 1
             req.accepted += out.accepted
@@ -209,10 +276,11 @@ class SpecDecServer:
     def run(self, key: jax.Array) -> list:
         """Drain the queue; returns all completed requests in finish order.
         Wall time accrues inside ``step()`` (shared with direct-step
-        callers), so this loop adds no timing of its own."""
+        callers), so this loop adds no timing of its own.  The SAME key
+        feeds every round — per-request streams are (uid, blocks)-keyed
+        (module docstring), so which round a block lands in never
+        changes its randomness."""
         done = []
-        round_idx = 0
         while self.queue or self.live:
-            done.extend(self.step(jax.random.fold_in(key, round_idx)))
-            round_idx += 1
+            done.extend(self.step(key))
         return done

@@ -120,6 +120,44 @@ def test_flash_attention_matches_ref(b, h, hkv, s, t, d, causal, window,
                                atol=tol, rtol=tol)
 
 
+def test_flash_attention_per_row_offsets_match_ref():
+    """Arena-prefill masking (DESIGN.md §9): per-row q_offset/kv_len in
+    the kernel == the jnp oracle == the dense layers.attention path."""
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(9)
+    b, h, hkv, s, t, d = 5, 4, 2, 24, 96, 32
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, t, d), jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, t, d), jnp.float32)
+    q_off = jnp.array([0, 3, 17, 40, 72], jnp.int32)
+    kv_len = q_off + s
+    out = flash_attention(q, k, v, q_off, kv_len, causal=True, tq=16, tk=32)
+    ref = flash_attention_ref(q, k, v, q_off, kv_len, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    dense = L.attention(q, k, v, causal=True, q_offset=q_off, kv_len=kv_len)
+    routed = L.attention(q, k, v, causal=True, q_offset=q_off,
+                         kv_len=kv_len, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(routed), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_fully_masked_rows_emit_zeros():
+    """Bucket-pad rows (kv_len == 0) must come back as zeros, not NaN."""
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 2, 8, 16), jnp.float32)
+    k = jax.random.normal(kk, (2, 2, 32, 16), jnp.float32)
+    v = jax.random.normal(kv, (2, 2, 32, 16), jnp.float32)
+    kv_len = jnp.array([0, 32], jnp.int32)
+    out = np.asarray(flash_attention(q, k, v, None, kv_len, causal=True,
+                                     tq=8, tk=8))
+    assert np.isfinite(out).all()
+    assert (out[0] == 0.0).all()
+    assert (np.abs(out[1]) > 0).any()
+
+
 # ---------------------------------------------------------------------------
 # decode_attention
 # ---------------------------------------------------------------------------
