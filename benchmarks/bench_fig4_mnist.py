@@ -1,6 +1,8 @@
 """Paper Fig. 4 / Tables 8-9: β-VAE distributed image compression on
 (synthetic) MNIST — rate-distortion for GLS vs shared-randomness baseline
-over K decoders and rates."""
+over K decoders and rates.  Coding runs through the batched compression
+pipeline (``compress_batch`` chunks, DESIGN.md §10) — one device program
+and one race dispatch per chunk of test images."""
 
 from __future__ import annotations
 
@@ -30,7 +32,7 @@ def _params(fast: bool):
     return params
 
 
-def run(fast: bool = False):
+def run(fast: bool = False, backend: str = "xla"):
     params = _params(fast)
     test, _ = digits_dataset(400, seed=1)
     rows = {}
@@ -39,10 +41,11 @@ def run(fast: bool = False):
         for l_max in (4, 32):
             t0 = time.perf_counter()
             g = evaluate_rd(jax.random.PRNGKey(1), params, test,
-                            n_atoms=256, l_max=l_max, k=k, trials=trials)
+                            n_atoms=256, l_max=l_max, k=k, trials=trials,
+                            backend=backend)
             b = evaluate_rd(jax.random.PRNGKey(1), params, test,
                             n_atoms=256, l_max=l_max, k=k, trials=trials,
-                            shared_sheet=True)
+                            shared_sheet=True, backend=backend)
             dt_us = (time.perf_counter() - t0) * 1e6
             rows[(k, l_max)] = (g, b)
             emit(f"fig4_mnist_K{k}_L{l_max}", dt_us,

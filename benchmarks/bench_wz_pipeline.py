@@ -1,0 +1,122 @@
+"""Batched Wyner–Ziv pipeline benchmark (DESIGN.md §10).
+
+Gaussian-source compression rounds (paper Sec. 5) three ways:
+
+  * ``loop``   — the per-sample oracle: one host-driven ``wz_round``
+                 dispatch + device->host sync per round;
+  * ``xla``    — the batched pipeline, B rounds as one jitted program
+                 (single ``gls_binned_race`` dispatch, jnp backend);
+  * ``pallas`` — same program racing through the Pallas kernel
+                 (interpret mode on CPU — dispatch structure, not speed,
+                 is what the backend demonstrates here).
+
+Checks, reported in the JSON payload run.py --quick merges into
+BENCH_specdec.json: xla↔pallas outputs exactly equal on the same round
+keys; the empirical any-decoder match rate meets the Prop.-4 lower
+bound; the batched xla path does not regress samples/s vs the loop.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.compression import GaussianWZ, simulate_trial
+from repro.compression.gaussian import _batch_trials
+
+B_FAST, B_FULL = 256, 512
+N_FAST, N_FULL = 2 ** 14, 2 ** 15
+K, L_MAX = 2, 4
+
+
+_REPS = 3  # best-of-N timing absorbs shared-runner noise
+
+
+def _timed(fn, *args, reps=_REPS):
+    fn(*args)                      # warm the jit cache
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def run(fast: bool = True):
+    b = B_FAST if fast else B_FULL
+    cfg = GaussianWZ(sigma2_w_given_a=0.01,
+                     n_atoms=N_FAST if fast else N_FULL)
+    keys = jax.random.split(jax.random.PRNGKey(0), b)
+
+    # Host-driven per-sample loop (the pre-pipeline serving path).
+    trial = jax.jit(lambda kk: simulate_trial(kk, cfg, K, L_MAX))
+    trial(keys[0])                 # warm
+    loop_s = float("inf")
+    for _ in range(_REPS):
+        t0 = time.perf_counter()
+        for i in range(b):
+            m, s, _ = trial(keys[i])
+            float(s)               # the per-round host sync
+        loop_s = min(loop_s, time.perf_counter() - t0)
+
+    backends = {}
+    outs = {}
+    for backend in ("xla", "pallas"):
+        # The pallas leg runs in interpret mode here (no TPU): coarsen
+        # the atom tile to amortize per-program overhead and time a
+        # single rep — outputs are tiling-invariant and only the
+        # equivalence check consumes them, the perf gate is xla-vs-loop.
+        tile = 8192 if backend == "pallas" else None
+        reps = 1 if backend == "pallas" else _REPS
+        fn = jax.jit(lambda kk, be=backend, tn=tile: _batch_trials(
+            kk, cfg, K, L_MAX, False, be, True, tile_n=tn))
+        (match, best_sq, infos), dt = _timed(fn, keys, reps=reps)
+        outs[backend] = (np.asarray(match), np.asarray(best_sq),
+                         np.asarray(infos))
+        backends[backend] = {
+            "samples_per_s": b / dt,
+            "us_per_batch": dt * 1e6,
+        }
+
+    equal = all(
+        np.array_equal(outs["xla"][i], outs["pallas"][i]) for i in range(3))
+    match, _, infos = outs["xla"]
+    from repro.core.bounds import wz_error_upper_bound
+    import jax.numpy as jnp
+    match_rate = float(np.mean(match.any(axis=1)))
+    bound = float(1.0 - wz_error_upper_bound(jnp.asarray(infos), K, L_MAX))
+
+    loop_rate = b / loop_s
+    payload = {
+        "batch": b,
+        "n_atoms": cfg.n_atoms,
+        "k": K,
+        "l_max": L_MAX,
+        "loop_samples_per_s": loop_rate,
+        "xla": backends["xla"],
+        "pallas": backends["pallas"],
+        "equal_xla_pallas": bool(equal),
+        "match_rate_any": match_rate,
+        "match_lower_bound": bound,
+        "bound_satisfied": bool(match_rate >= bound - 0.05),
+        "pipeline_speedup_vs_loop":
+            backends["xla"]["samples_per_s"] / loop_rate,
+    }
+    emit("wz_pipeline_tokens_per_s", backends["xla"]["us_per_batch"],
+         f"xla={backends['xla']['samples_per_s']:.0f}/s;"
+         f"pallas={backends['pallas']['samples_per_s']:.0f}/s;"
+         f"loop={loop_rate:.0f}/s;"
+         f"speedup={payload['pipeline_speedup_vs_loop']:.1f}x;"
+         f"equal={equal}")
+    emit("wz_pipeline_match_rate", 0.0,
+         f"match={match_rate:.3f};bound={bound:.3f};"
+         f"ok={payload['bound_satisfied']}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -3,11 +3,14 @@ Prints ``name,us_per_call,derived`` CSV (harness contract).
 
 Set REPRO_BENCH_FAST=0 for the full (slower) configurations.
 
-``--quick`` runs only the spec-dec serving benchmark and writes its JSON
-payload (block efficiency + tokens/s for gls vs specinfer vs spectr at
-K in {2, 8}, verifier-backend host-sync deltas, batched-vs-sequential
-scheduler tokens/s) to BENCH_specdec.json — the artifact CI archives so
-the perf trajectory is tracked per commit.
+``--quick`` runs the spec-dec serving benchmark plus the batched
+Wyner–Ziv pipeline benchmark and writes their JSON payload (block
+efficiency + tokens/s for gls vs specinfer vs spectr at K in {2, 8},
+verifier-backend host-sync deltas, batched-vs-sequential scheduler
+tokens/s, and the ``wz_pipeline`` rows: samples/s for loop vs xla vs
+pallas, xla↔pallas equality, Prop.-4 match bound) to BENCH_specdec.json
+— the artifact CI archives so the perf trajectory is tracked per
+commit.
 """
 
 from __future__ import annotations
@@ -24,8 +27,9 @@ FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
 
 def quick(out_path: str) -> None:
-    from benchmarks import bench_serving_backends
+    from benchmarks import bench_serving_backends, bench_wz_pipeline
     payload = bench_serving_backends.run(fast=True)
+    payload["wz_pipeline"] = bench_wz_pipeline.run(fast=True)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {out_path}")
@@ -52,6 +56,7 @@ def main() -> None:
         bench_serving_backends,
         bench_table1_iid_drafts,
         bench_table2_diverse_drafts,
+        bench_wz_pipeline,
     )
     suites = [
         ("fig6", bench_fig6_toy_acceptance),
@@ -60,6 +65,7 @@ def main() -> None:
         ("serving", bench_serving_backends),
         ("fig2", bench_fig2_gaussian),
         ("fig4", bench_fig4_mnist),
+        ("wz_pipeline", bench_wz_pipeline),
         ("ablation_L", bench_ablation_draft_len),
         ("roofline", bench_roofline),
     ]

@@ -1,8 +1,17 @@
-"""Distributed lossy compression with side information (paper Sec. 5)."""
+"""Distributed lossy compression with side information (paper Sec. 5;
+DESIGN.md §10).  ``wz`` is the per-sample oracle; ``pipeline`` is the
+batched serving-grade engine on the ``gls_binned_race`` kernel."""
 
 from repro.compression.gaussian import GaussianWZ, run_experiment, simulate_trial
+from repro.compression.pipeline import (
+    WZBatch,
+    batched_race_tables,
+    wz_pipeline,
+    wz_round_batch,
+)
 from repro.compression.vae import (
     VAETrainConfig,
+    compress_batch,
     compress_image,
     evaluate_rd,
     init_vae,
@@ -13,7 +22,10 @@ from repro.compression.wz import WZCode, make_bins, wz_round
 __all__ = [
     "GaussianWZ",
     "VAETrainConfig",
+    "WZBatch",
     "WZCode",
+    "batched_race_tables",
+    "compress_batch",
     "compress_image",
     "evaluate_rd",
     "init_vae",
@@ -21,5 +33,7 @@ __all__ = [
     "run_experiment",
     "simulate_trial",
     "train_vae",
+    "wz_pipeline",
     "wz_round",
+    "wz_round_batch",
 ]

@@ -1,4 +1,5 @@
-"""Synthetic Gaussian source experiment (paper Sec. 5 + App. D.2).
+"""Synthetic Gaussian source experiment (paper Sec. 5 + App. D.2;
+DESIGN.md §10.5).
 
   A ~ N(0,1);  T_k = A + ζ_k, ζ_k ~ N(0, σ²_{T|A});
   encoder target  p_{W|A}(.|a) = N(a, σ²_{W|A});
@@ -8,7 +9,14 @@
 Importance atoms are N prior draws U_i ~ p_W = N(0, σ²_W) (App. C); rate
 R = log2(l_max) bits/sample; the final estimate is the best among the K
 decoders (oracle selection — the paper's "at least one decoder succeeds"
-semantics)."""
+semantics).
+
+``simulate_trial`` is the per-sample oracle (one host-driven
+``wz_round``); ``run_experiment`` batches the trial loop through
+``repro.compression.pipeline`` — weight construction, the stacked race
+tables and the single ``gls_binned_race`` dispatch all fuse into one
+jitted device program per chunk of trials.
+"""
 
 from __future__ import annotations
 
@@ -18,7 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compression.pipeline import chunked_batch_map, wz_round_batch
 from repro.compression.wz import make_bins, wz_round
+from repro.core.bounds import wz_error_upper_bound
+
+_LN2 = float(np.log(2.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,23 +62,37 @@ def _log_normal(x, mu, var):
     return -0.5 * (jnp.log(2 * jnp.pi * var) + (x - mu) ** 2 / var)
 
 
-def simulate_trial(key: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
-                   shared_sheet: bool = False):
-    """One compression round.  Returns (match (K,), sq_err_best, sq_errs)."""
+def _trial_setup(key: jax.Array, cfg: GaussianWZ, k: int, l_max: int):
+    """One trial's source, side info, atoms, importance weights and bins.
+
+    Returns (k_race, a, t, atoms, log_w_enc (N,), log_w_dec (K, N),
+    bins (N,)) — log λ_q,i for the encoder and log λ_p,i^(k) per decoder
+    (App. C notation).  Shared verbatim by the per-sample oracle and the
+    batched pipeline (vmapped), so both paths consume identical RNG.
+    """
     k_a, k_t, k_u, k_bins, k_race = jax.random.split(key, 5)
     a = jax.random.normal(k_a)
     t = a + jnp.sqrt(cfg.sigma2_t_given_a) * jax.random.normal(k_t, (k,))
     atoms = jnp.sqrt(cfg.sigma2_w) * jax.random.normal(k_u, (cfg.n_atoms,))
 
-    # Encoder weights: log p_{W|A}(U_i|a) - log p_W(U_i).
+    # Encoder weights: log λ_q,i = log p_{W|A}(U_i|a) - log p_W(U_i).
     log_w_enc = (_log_normal(atoms, a, cfg.sigma2_w_given_a)
                  - _log_normal(atoms, 0.0, cfg.sigma2_w))
-    # Decoder weights per k.
+    # Decoder weights: log λ_p,i^(k) = log p_{W|T}(U_i|t_k) - log p_W(U_i).
     mu_t, var_t = cfg.decoder_target(t)
     log_w_dec = (_log_normal(atoms[None, :], mu_t[:, None], var_t)
                  - _log_normal(atoms[None, :], 0.0, cfg.sigma2_w))
 
     bins = make_bins(k_bins, cfg.n_atoms, l_max)
+    return k_race, a, t, atoms, log_w_enc, log_w_dec, bins
+
+
+def simulate_trial(key: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
+                   shared_sheet: bool = False):
+    """One compression round (per-sample oracle path).
+    Returns (match (K,), sq_err_best, sq_errs)."""
+    k_race, a, t, atoms, log_w_enc, log_w_dec, bins = _trial_setup(
+        key, cfg, k, l_max)
     code = wz_round(k_race, log_w_enc, log_w_dec, bins, k,
                     shared_sheet=shared_sheet)
     w_hat = atoms[code.x]                     # (K,) decoder outputs
@@ -75,18 +101,81 @@ def simulate_trial(key: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
     return code.match, jnp.min(sq), sq
 
 
+# Sub-batch width for the xla backend's in-program lax.map: per-chunk
+# intermediates ((chunk, K, N) score tables) stay cache-resident on CPU
+# hosts instead of thrashing through tens of MB per pass.  Chunks
+# sequence INSIDE the jitted program — still one host dispatch per
+# batch.  The pallas backend keeps the single full-batch kernel: its
+# VMEM tiling already bounds the working set, and the one-kernel-
+# dispatch-per-batch contract is load-bearing there (DESIGN.md §10.4).
+_DEVICE_CHUNK = 32
+
+
+def _batch_trials(keys: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
+                  shared_sheet: bool, backend: str, interpret: bool,
+                  tile_n: int = None):
+    """A batch of trials as ONE device program: vmapped weight models
+    feeding ``wz_round_batch`` (one race dispatch on the pallas path),
+    then the MMSE reconstructions — nothing touches the host in
+    between.  ``tile_n`` passes through to the pallas kernel's atom
+    tile (coarser tiles amortize per-program overhead on interpret
+    hosts; outputs are tiling-invariant)."""
+    def chunk(kk):
+        k_race, a, t, atoms, log_w_enc, log_w_dec, bins = jax.vmap(
+            lambda one: _trial_setup(one, cfg, k, l_max))(kk)
+        code = wz_round_batch(k_race, log_w_enc, log_w_dec, bins,
+                              l_max=l_max, shared_sheet=shared_sheet,
+                              backend=backend, interpret=interpret,
+                              tile_n=tile_n)
+        w_hat = jnp.take_along_axis(atoms, code.x, axis=1)    # (B, K)
+        a_hat = cfg.mmse(w_hat, t)
+        sq = (a_hat - a[:, None]) ** 2
+        # Information-density samples i(W;A|T) in bits at the selected
+        # atom (the Prop.-4 statistic): log2 of λ_q,Y over the
+        # decoder-average λ_p,Y — prior terms cancel in the ratio.
+        w_enc_y = jnp.take_along_axis(log_w_enc, code.y[:, None],
+                                      axis=1)[:, 0]
+        w_dec_y = jnp.take_along_axis(
+            log_w_dec, code.y[:, None, None].repeat(k, 1), axis=2)[..., 0]
+        info_bits = (w_enc_y - (jax.nn.logsumexp(w_dec_y, axis=1)
+                                - jnp.log(float(k)))) / _LN2
+        return code.match, jnp.min(sq, axis=1), info_bits
+
+    b = keys.shape[0]
+    if backend == "xla" and b > _DEVICE_CHUNK and b % _DEVICE_CHUNK == 0:
+        outs = jax.lax.map(
+            chunk, keys.reshape(b // _DEVICE_CHUNK, _DEVICE_CHUNK,
+                                *keys.shape[1:]))
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape(b, *x.shape[2:]), outs)
+    return chunk(keys)
+
+
 def run_experiment(key: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
-                   trials: int, shared_sheet: bool = False):
-    """Vectorized trials.  Returns dict with matching prob + distortion."""
-    keys = jax.random.split(key, trials)
-    fn = jax.jit(jax.vmap(lambda kk: simulate_trial(
-        kk, cfg, k, l_max, shared_sheet)), static_argnums=())
-    match, best_sq, _ = fn(keys)
-    any_match = jnp.any(match, axis=-1)
+                   trials: int, shared_sheet: bool = False, *,
+                   backend: str = "xla", interpret: bool = True,
+                   batch_size: int = 512):
+    """Batched trials through the Wyner–Ziv pipeline.
+
+    Trials run in fixed-size chunks (one compiled program, the tail
+    chunk padded and discarded host-side) so arbitrarily many trials
+    stream through bounded device memory.  Returns the matching
+    probability + distortion dict, now including ``match_lower_bound`` —
+    the Prop.-4 lower bound on ``match_prob_any`` evaluated from the
+    empirical information densities (``1 - wz_error_upper_bound``).
+    """
+    fn = jax.jit(lambda kk: _batch_trials(kk, cfg, k, l_max, shared_sheet,
+                                          backend, interpret))
+    match, best_sq, infos = chunked_batch_map(
+        fn, (jax.random.split(key, trials),), trials, batch_size)
+
+    any_match = match.any(axis=-1)
     return {
-        "match_prob_any": float(jnp.mean(any_match)),
-        "match_prob_each": float(jnp.mean(match)),
-        "distortion": float(jnp.mean(best_sq)),
-        "distortion_db": float(10 * jnp.log10(jnp.mean(best_sq))),
+        "match_prob_any": float(np.mean(any_match)),
+        "match_prob_each": float(np.mean(match)),
+        "match_lower_bound": float(
+            1.0 - wz_error_upper_bound(jnp.asarray(infos), k, l_max)),
+        "distortion": float(np.mean(best_sq)),
+        "distortion_db": float(10 * np.log10(np.mean(best_sq))),
         "rate_bits": float(np.log2(l_max)),
     }

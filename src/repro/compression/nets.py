@@ -1,5 +1,6 @@
-"""Small conv/MLP building blocks for the β-VAE compression pipeline
-(paper Table 7), in pure JAX with NCHW conv layouts."""
+"""Small conv/MLP building blocks for the β-VAE compression codec
+(paper Table 7; consumed by ``repro.compression.vae``, DESIGN.md
+§10.5), in pure JAX with NCHW conv layouts."""
 
 from __future__ import annotations
 

@@ -1,16 +1,20 @@
 """β-VAE distributed image compression (paper Sec. 5 "Lossy compression on
 MNIST" + App. D.3), adapted to the offline synthetic digit dataset.
 
-Pipeline (mirrors Phan et al. / the paper, Fig. 1):
+Pipeline (mirrors Phan et al. / the paper, Fig. 1; DESIGN.md §10.5):
   * encoder net: source image (right half, 1x28x14) -> Gaussian posterior
     p_{W|A} = N(e1(a), diag(e2(a))) over a 4-d latent; prior p_W = N(0, I).
   * decoder net: (w, projected side-info features) -> reconstruction.
   * projection net: 7x7 side-info crop -> 128-d features.
   * estimator net: (w, side-info) -> sigmoid classifier of joint vs
     product, whose odds h/(1-h) estimate the density ratio
-    p_{W|T}(w|t)/p_W(w) — exactly the decoder importance weight.
-  * coding: importance-sampled conditional GLS over N prior draws with
-    l_max bins (repro.compression.wz).
+    p_{W|T}(w|t)/p_W(w) — exactly the decoder importance weight λ_p^(k).
+  * coding: importance-sampled conditional GLS over N prior draws U_i
+    with random bin ids l_i in [0, l_max) (App. C).  ``compress_batch``
+    codes a whole batch of images through
+    ``repro.compression.pipeline`` — net forwards, stacked race tables
+    and ONE ``gls_binned_race`` dispatch in a single jitted program;
+    ``compress_image`` is the per-image wrapper.
 """
 
 from __future__ import annotations
@@ -22,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compression import nets as N
-from repro.compression.wz import make_bins, wz_round
+from repro.compression.pipeline import chunked_batch_map, wz_round_batch
+from repro.compression.wz import make_bins
 from repro.optim import adam_init, adam_update
 
 LATENT = 4
@@ -171,56 +176,102 @@ def train_vae(key, images: np.ndarray, cfg: VAETrainConfig, log=print):
 # ---------------------------------------------------------------------------
 
 
-def compress_image(key, params, source, crops, *, n_atoms: int,
-                   l_max: int, k: int, shared_sheet: bool = False):
-    """Compress ONE source (28,14) for K decoders with crops (K,7,7).
+def compress_batch(keys, params, sources, crops, *, n_atoms: int,
+                   l_max: int, k: int, shared_sheet: bool = False,
+                   backend: str = "xla", interpret: bool = True):
+    """Compress B sources (B,28,14) for K decoders each (crops
+    (B,K,7,7); keys (B,)) as one device program.
 
-    Returns (recons (K,28,14), match (K,), mse_best)."""
-    k_atoms, k_bins, k_race = jax.random.split(key, 3)
-    atoms = jax.random.normal(k_atoms, (n_atoms, LATENT))   # U_i ~ p_W
+    Per image b: atoms U_i ~ p_W = N(0, I_4); encoder weight
+    log λ_q,i = log N(U_i; μ(a_b), σ²(a_b)) - log N(U_i; 0, I); decoder
+    weight log λ_p,i^(k) = the estimator's joint-vs-product logit
+    (log h/(1-h) estimates log p_{W|T}/p_W).  All B·(K+Ke) races resolve
+    in ONE ``gls_binned_race`` dispatch (DESIGN.md §10.2).
 
-    mu, logvar = encode(params["enc"], source[None])
-    var = jnp.exp(logvar[0])
+    Returns (recons (B,K,28,14), match (B,K), mse (B,K))."""
+    b = sources.shape[0]
+    ks = jax.vmap(lambda kk: jax.random.split(kk, 3))(keys)
+    k_atoms, k_bins, k_race = ks[:, 0], ks[:, 1], ks[:, 2]
+    atoms = jax.vmap(
+        lambda kk: jax.random.normal(kk, (n_atoms, LATENT)))(k_atoms)
+
+    mu, logvar = encode(params["enc"], sources)             # (B, 4)
+    var = jnp.exp(logvar)
     # log λ_q,i = log N(U_i; mu, var) - log N(U_i; 0, 1)
-    log_q = jnp.sum(-0.5 * (jnp.log(2 * jnp.pi * var)
-                            + (atoms - mu[0]) ** 2 / var), axis=-1)
+    log_q = jnp.sum(-0.5 * (jnp.log(2 * jnp.pi * var)[:, None]
+                            + (atoms - mu[:, None]) ** 2 / var[:, None]),
+                    axis=-1)                                # (B, N)
     log_prior = jnp.sum(-0.5 * (jnp.log(2 * jnp.pi) + atoms ** 2), axis=-1)
     log_w_enc = log_q - log_prior
 
-    feats = project(params["proj"], crops)                  # (K, 128)
-    # Estimator odds stand in for p_{W|T}/p_W per (atom, decoder).
-    def dec_weights(f):
-        logits = estimator_logit(
-            params["est"], atoms, jnp.broadcast_to(f, (n_atoms, f.shape[-1])))
-        return logits  # log odds = log h/(1-h) = the classifier logit
-    log_w_dec = jax.vmap(dec_weights)(feats)                # (K, N)
+    feats = project(params["proj"],
+                    crops.reshape(b * k, 7, 7)).reshape(b, k, -1)
+    # Estimator odds stand in for λ_p,i^(k) per (atom, decoder).
+    def dec_weights(atoms_b, f):
+        return estimator_logit(
+            params["est"], atoms_b,
+            jnp.broadcast_to(f, (n_atoms, f.shape[-1])))
+    log_w_dec = jax.vmap(
+        lambda atoms_b, feats_b: jax.vmap(
+            lambda f: dec_weights(atoms_b, f))(feats_b))(atoms, feats)
 
-    bins = make_bins(k_bins, n_atoms, l_max)
-    code = wz_round(k_race, log_w_enc, log_w_dec, bins, k,
-                    shared_sheet=shared_sheet)
-    w_dec = atoms[code.x]                                   # (K, 4)
-    recons = decode(params["dec"], w_dec, feats)            # (K, 28, 14)
-    mse = jnp.mean((recons - source[None]) ** 2, axis=(1, 2))
-    return recons, code.match, jnp.min(mse)
+    bins = jax.vmap(lambda kk: make_bins(kk, n_atoms, l_max))(k_bins)
+    code = wz_round_batch(k_race, log_w_enc, log_w_dec, bins, l_max=l_max,
+                          shared_sheet=shared_sheet, backend=backend,
+                          interpret=interpret)
+    w_dec = jnp.take_along_axis(
+        atoms, code.x[..., None], axis=1)                   # (B, K, 4)
+    recons = decode(params["dec"], w_dec.reshape(b * k, LATENT),
+                    feats.reshape(b * k, -1)).reshape(b, k, 28, 14)
+    mse = jnp.mean((recons - sources[:, None]) ** 2, axis=(2, 3))
+    return recons, code.match, mse
+
+
+def compress_image(key, params, source, crops, *, n_atoms: int,
+                   l_max: int, k: int, shared_sheet: bool = False,
+                   backend: str = "xla", interpret: bool = True):
+    """Compress ONE source (28,14) for K decoders with crops (K,7,7) —
+    the B=1 lane of ``compress_batch`` (bit-identical RNG: vmapped
+    jax.random ops equal their unbatched per-lane results).
+
+    Returns (recons (K,28,14), match (K,), mse_best)."""
+    recons, match, mse = compress_batch(
+        key[None], params, source[None], crops[None], n_atoms=n_atoms,
+        l_max=l_max, k=k, shared_sheet=shared_sheet, backend=backend,
+        interpret=interpret)
+    return recons[0], match[0], jnp.min(mse[0])
 
 
 def evaluate_rd(key, params, images: np.ndarray, *, n_atoms: int = 512,
                 l_max: int = 16, k: int = 2, trials: int = 128,
-                shared_sheet: bool = False, seed: int = 0):
-    """Rate-distortion point over `trials` random test images."""
+                shared_sheet: bool = False, seed: int = 0,
+                backend: str = "xla", interpret: bool = True,
+                batch_size: int = 64):
+    """Rate-distortion point over `trials` random test images.
+
+    Test images and crops are prepared host-side, then coded in
+    fixed-size ``compress_batch`` chunks (the tail chunk padded and
+    discarded) — one compiled program and one race dispatch per chunk
+    instead of one host round-trip per image."""
     from repro.data.mnist import wz_split
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, len(images), trials)
-    mses, matches = [], []
-    fn = jax.jit(lambda kk, s, c: compress_image(
-        kk, params, s, c, n_atoms=n_atoms, l_max=l_max, k=k,
-        shared_sheet=shared_sheet))
-    for i, j in enumerate(idx):
-        img = images[j:j + 1]
-        srcs, crop0 = wz_split(np.repeat(img, k, 0), rng)
-        key, sub = jax.random.split(key)
-        _, match, mse = fn(sub, jnp.asarray(srcs[0]), jnp.asarray(crop0))
-        mses.append(float(mse))
-        matches.append(float(jnp.any(match)))
-    return {"rate_bits": float(np.log2(l_max)), "mse": float(np.mean(mses)),
-            "match_prob_any": float(np.mean(matches))}
+    sources, crops = [], []
+    for j in idx:
+        srcs, crop0 = wz_split(np.repeat(images[j:j + 1], k, 0), rng)
+        sources.append(srcs[0])
+        crops.append(crop0)
+    sources = jnp.asarray(np.stack(sources))            # (T, 28, 14)
+    crops = jnp.asarray(np.stack(crops))                # (T, K, 7, 7)
+
+    def batch_fn(kk, s, c):
+        _, match, mse = compress_batch(
+            kk, params, s, c, n_atoms=n_atoms, l_max=l_max, k=k,
+            shared_sheet=shared_sheet, backend=backend, interpret=interpret)
+        return match, jnp.min(mse, axis=1)   # recons stay on device
+
+    match, mse = chunked_batch_map(
+        jax.jit(batch_fn), (jax.random.split(key, trials), sources, crops),
+        trials, batch_size)
+    return {"rate_bits": float(np.log2(l_max)), "mse": float(np.mean(mse)),
+            "match_prob_any": float(np.mean(match.any(axis=1)))}

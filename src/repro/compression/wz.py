@@ -1,11 +1,26 @@
-"""Wyner–Ziv-style distributed lossy compression with GLS (paper Sec. 5).
+"""Wyner–Ziv-style distributed lossy compression with GLS (paper Sec. 5,
+App. C; DESIGN.md §10).
 
-One encoder broadcasts an ``log2(l_max)``-bit message to K decoders, each
-holding independent side information.  Samples live on N importance atoms
-(prior draws U_1..U_N with bin ids l_1..l_N); the encoder and decoders
-race shared Exp(1) sheets over their respective importance weights
-(App. C).  ``shared_sheet=True`` gives the paper's baseline where all
-decoders reuse sheet 0 (and the encoder races only sheet 0).
+One encoder broadcasts a ``log2(l_max)``-bit message to K decoders, each
+holding independent side information T_k.  Samples live on N importance
+atoms — prior draws U_1..U_N ~ p_W with uniformly random bin ids
+l_1..l_N in [0, l_max) (App. C's random binning).  The encoder races
+shared Exp(1) sheets over the importance weights
+
+    λ_q,i = p_{W|A}(U_i | a) / p_W(U_i)          (encoder target ratio)
+
+selects Y = U_{i*}, and transmits the bin id M = l_{i*}.  Decoder k
+races the SAME sheets over its own ratio λ_{p,i}^{(k)} =
+p_{W|T}(U_i | t_k) / p_W(U_i) restricted to the transmitted bin via the
+indicator ``1{l_i = M}``; a match (X^(k) = Y) reproduces the encoder's
+sample exactly.  ``shared_sheet=True`` gives the paper's
+common-randomness baseline where all decoders reuse sheet 0 (and the
+encoder races only sheet 0) — see DESIGN.md §10.3.
+
+This module is the minimal PER-SAMPLE reference path (the equivalence
+oracle).  The batched serving-grade engine — stacked RNG, one fused
+``gls_binned_race`` dispatch per batch — lives in
+``repro.compression.pipeline``.
 """
 
 from __future__ import annotations
@@ -17,29 +32,50 @@ import jax.numpy as jnp
 
 
 class WZCode(NamedTuple):
-    y: jax.Array          # encoder-selected atom index
-    message: jax.Array    # transmitted bin id  l_y
-    x: jax.Array          # (K,) decoder-selected atom indices
-    match: jax.Array      # (K,) bool — X^(k) == Y
+    """One encode/decode outcome (paper App. C notation).
+
+    Attributes:
+      y: i32 — encoder-selected atom index i* (the sample Y = U_{i*}).
+      message: i32 — transmitted bin id M = l_{i*} (log2(l_max) bits).
+      x: i32[K] — decoder-selected atom indices X^(k).
+      match: bool[K] — the exact-reproduction events X^(k) == Y.
+    """
+
+    y: jax.Array
+    message: jax.Array
+    x: jax.Array
+    match: jax.Array
 
 
 def _race_tables(key: jax.Array, k: int, n: int) -> jax.Array:
-    """log S for K sheets of N Exp(1) races."""
-    u = jax.random.uniform(key, (k, n), minval=jnp.finfo(jnp.float32).tiny,
-                           maxval=1.0)
-    return jnp.log(-jnp.log(u))
+    """log S for K shared sheets of N Exp(1) race times (App. C).
+
+    Uses ``jax.random.exponential`` (inverse-CDF, full support) rather
+    than a hand-rolled ``log(-log U)`` over a tiny-clamped uniform: the
+    old clamp truncated the upper tail of S at ``-log(tiny)`` and the
+    double log amplified rounding near u -> 1.  The max() guard only
+    protects the measure-zero ``S == 0`` draw from producing -inf;
+    tests/test_compression.py pins the resulting race distribution.
+    """
+    s = jax.random.exponential(key, (k, n))
+    return jnp.log(jnp.maximum(s, jnp.finfo(jnp.float32).tiny))
 
 
 def wz_round(
     key: jax.Array,
     log_w_enc: jax.Array,     # (N,)  log λ_q,i  (unnormalized ok)
-    log_w_dec: jax.Array,     # (K, N) log p_{W|T}(U_i | t_k)/p_W(U_i)
-    bins: jax.Array,          # (N,) int bin ids in [0, l_max)
+    log_w_dec: jax.Array,     # (K, N) log λ_p,i^{(k)} = log p_{W|T}(U_i|t_k)/p_W(U_i)
+    bins: jax.Array,          # (N,) int bin ids l_i in [0, l_max)
     k: int,
     shared_sheet: bool = False,
 ) -> WZCode:
-    """One encode/decode round.  Decoder weights are masked to the
-    transmitted bin (the 1{l_i = M} indicator)."""
+    """One encode/decode round (the per-sample oracle, DESIGN.md §10.1).
+
+    Encoder: Y = argmin_i min_k S_i^(k) / λ_q,i (min over all K sheets;
+    sheet 0 only under ``shared_sheet``).  Decoders: weights masked to
+    the transmitted bin by the ``1{l_i = M}`` indicator (-inf outside),
+    then X^(k) = argmin_i S_i^(k) / λ_p,i^(k).  Atoms with non-finite
+    log-weight never win (race time +inf)."""
     n = log_w_enc.shape[-1]
     log_s = _race_tables(key, k, n)
     if shared_sheet:
@@ -60,4 +96,5 @@ def wz_round(
 
 
 def make_bins(key: jax.Array, n: int, l_max: int) -> jax.Array:
+    """Random binning l_i ~ Unif[0, l_max) of the N atoms (App. C)."""
     return jax.random.randint(key, (n,), 0, l_max)

@@ -20,6 +20,12 @@ are the dominant cost in interpret mode and amortize DMA setup on TPU),
 and the row count is bucketed up to the row-block multiple so nearby
 batch sizes (L+1 for one request, S*(L+1) for a fused round) reuse one
 compiled kernel instead of recompiling per shape.
+
+``gls_binned_race`` (the Wyner–Ziv compression hot path, DESIGN.md §10)
+reuses the row-race tiling but keeps ``l_max`` running (min, argmin)
+accumulators per (row, sheet) — one per bin id — so a single pass over
+the atom axis resolves the encoder race and every bin-masked decoder
+race of a batched compression round.
 """
 
 from __future__ import annotations
@@ -125,6 +131,55 @@ def _row_kernel(log_s_ref, log_q_ref,
         rarg_out_ref[...] = rarg_ref[...]
 
 
+def _binned_kernel(log_s_ref, log_q_ref, bins_ref,
+                   bmin_out_ref, barg_out_ref,
+                   bmin_ref, barg_ref,
+                   *, tile_n: int, n_tiles: int, l_max: int):
+    """Per-(row, sheet, bin) (min, argmin) of ``log_s - log_q``.
+
+    The Wyner–Ziv decoder races only atoms inside the transmitted bin
+    (the ``1{l_i = M}`` indicator, paper App. C).  Which bin wins is not
+    known until the encoder race resolves, so instead of masking to ONE
+    bin this kernel reduces every bin in the same pass over the atom
+    axis: the bin-id tile selects each atom into exactly one of the
+    ``l_max`` running (min, argmin) accumulators.  One dispatch then
+    serves the encoder race (min over sheets and bins) AND all K
+    bin-masked decoder races (slice the winning bin afterwards) —
+    DESIGN.md §10.2.  ``l_max`` is static and small (the rate is
+    ``log2 l_max`` bits, ≤ 6 in every paper configuration), so the bin
+    loop unrolls at trace time.
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        bmin_ref[...] = jnp.full_like(bmin_ref, jnp.inf)
+        barg_ref[...] = jnp.zeros_like(barg_ref)
+
+    log_s = log_s_ref[...]        # (RB, K, TILE_N)
+    log_q = log_q_ref[...]
+    bins = bins_ref[...]          # (RB, TILE_N)
+
+    score = log_s - log_q
+    # isfinite, not `> -inf`: +inf garbage weights must stay dead on the
+    # kernel exactly as on gls_binned_race_ref (bit-interchangeability).
+    score = jnp.where(jnp.isfinite(log_q), score, jnp.inf)
+    for l in range(l_max):
+        in_bin = (bins == l)[:, None, :]                 # (RB, 1, TILE_N)
+        s_l = jnp.where(in_bin, score, jnp.inf)
+        tile_min = jnp.min(s_l, axis=2)                  # (RB, K)
+        tile_arg = jnp.argmin(s_l, axis=2).astype(jnp.int32)
+        tile_idx = t * tile_n + tile_arg
+        better = tile_min < bmin_ref[:, :, l]
+        bmin_ref[:, :, l] = jnp.where(better, tile_min, bmin_ref[:, :, l])
+        barg_ref[:, :, l] = jnp.where(better, tile_idx, barg_ref[:, :, l])
+
+    @pl.when(t == n_tiles - 1)
+    def _emit():
+        bmin_out_ref[...] = bmin_ref[...]
+        barg_out_ref[...] = barg_ref[...]
+
+
 def _row_race_tiling(b: int, k: int, n: int, tile_n: int):
     """(tile_n, row_block, b_pad): lane-aligned vocab tile no larger than
     the (padded) vocab, and the largest row block that keeps one f32
@@ -184,6 +239,73 @@ def gls_row_race(log_s: jax.Array, log_q: jax.Array, *,
         interpret=interpret,
     )(log_s, log_q)
     return rmin[:b], rarg[:b]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l_max", "tile_n", "interpret"))
+def gls_binned_race(log_s: jax.Array, log_q: jax.Array, bins: jax.Array, *,
+                    l_max: int, tile_n: int = None,
+                    interpret: bool = True):
+    """Bin-masked GLS race statistics (the Wyner–Ziv compression op).
+
+    log_s/log_q: (B, K, N) f32; bins: (B, N) i32 with values in
+    [0, l_max).  Returns (bmin (B, K, l_max) f32, barg (B, K, l_max)
+    i32): for every (row, sheet, bin) the minimum race time
+    ``log_s - log_q`` over the atoms whose bin id equals that bin, and
+    its atom index.  ``-inf`` in log_q marks dead atoms (zero importance
+    weight — never win, exactly like zero-prob symbols in
+    ``gls_row_race``); a bin with no live atom reports (inf, 0).  Ties
+    break toward the lower atom index, matching ``jnp.argmin``, so the
+    kernel stays bit-interchangeable with ``gls_binned_race_ref``.
+
+    Tiling contract (DESIGN.md §10.4): the atom axis is tiled like
+    ``gls_row_race`` — lane-aligned vocab-fitted tiles no larger than
+    ``tile_n`` (None = the ``DEFAULT_TILE_N`` default), so importance
+    lists of 2^14..2^16 atoms stream through fixed VMEM; rows are
+    blocked/bucketed by ``_row_race_tiling`` (rows are independent, pad
+    rows carry -inf weights).  Atom-axis padding uses bin id ``l_max``
+    (matches no real bin) plus -inf weights.  ``l_max`` is static: the
+    accumulator is (ROW_BLOCK, K, l_max) VMEM scratch and the per-bin
+    select loop unrolls at trace time.
+    """
+    b, k, n = log_s.shape
+    tile_n, rb, b_pad = _row_race_tiling(
+        b, k, n, DEFAULT_TILE_N if tile_n is None else tile_n)
+    pad_n = _round_up(n, tile_n) - n
+    if pad_n or b_pad > b:
+        log_s = jnp.pad(log_s, ((0, b_pad - b), (0, 0), (0, pad_n)),
+                        constant_values=0.0)
+        log_q = jnp.pad(log_q, ((0, b_pad - b), (0, 0), (0, pad_n)),
+                        constant_values=jnp.float32(-jnp.inf))
+        bins = jnp.pad(bins, ((0, b_pad - b), (0, pad_n)),
+                       constant_values=l_max)
+    n_tiles = log_s.shape[2] // tile_n
+
+    kernel = functools.partial(_binned_kernel, tile_n=tile_n,
+                               n_tiles=n_tiles, l_max=l_max)
+    bmin, barg = pl.pallas_call(
+        kernel,
+        grid=(b_pad // rb, n_tiles),
+        in_specs=[
+            pl.BlockSpec((rb, k, tile_n), lambda i, t: (i, 0, t)),
+            pl.BlockSpec((rb, k, tile_n), lambda i, t: (i, 0, t)),
+            pl.BlockSpec((rb, tile_n), lambda i, t: (i, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rb, k, l_max), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((rb, k, l_max), lambda i, t: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, k, l_max), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad, k, l_max), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rb, k, l_max), jnp.float32),  # running bin minima
+            pltpu.VMEM((rb, k, l_max), jnp.int32),    # running bin argmins
+        ],
+        interpret=interpret,
+    )(log_s, log_q, bins)
+    return bmin[:b], barg[:b]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))

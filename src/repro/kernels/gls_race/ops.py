@@ -1,11 +1,36 @@
-"""jit'd public wrappers for the GLS race kernels with jnp fallbacks."""
+"""jit'd public wrappers for the GLS race kernels with jnp fallbacks.
+
+``dispatch_counts`` is trace-time dispatch accounting: each op wrapper
+bumps its counter while its body is being traced into a program, so the
+count equals the number of race dispatches EMBEDDED in each compiled
+program (a program traced once and executed many times performs exactly
+that many kernel dispatches per execution).  tests/test_compression.py
+uses it to pin the Wyner–Ziv pipeline to ONE ``gls_binned_race``
+dispatch per batch.
+"""
 
 from __future__ import annotations
 
+import collections
+
 import jax
 
-from repro.kernels.gls_race.kernel import gls_race, gls_row_race
-from repro.kernels.gls_race.ref import gls_race_ref, gls_row_race_ref
+from repro.kernels.gls_race.kernel import (
+    gls_binned_race,
+    gls_race,
+    gls_row_race,
+)
+from repro.kernels.gls_race.ref import (
+    gls_binned_race_ref,
+    gls_race_ref,
+    gls_row_race_ref,
+)
+
+dispatch_counts: collections.Counter = collections.Counter()
+
+
+def reset_dispatch_counts() -> None:
+    dispatch_counts.clear()
 
 
 def gls_race_op(log_s, log_p, log_q, active, *, use_kernel: bool = True,
@@ -20,3 +45,16 @@ def gls_row_race_op(log_s, log_q, *, use_kernel: bool = True,
     if use_kernel:
         return gls_row_race(log_s, log_q, interpret=interpret)
     return jax.jit(gls_row_race_ref)(log_s, log_q)
+
+
+def gls_binned_race_op(log_s, log_q, bins, *, l_max: int,
+                       use_kernel: bool = True, interpret: bool = True,
+                       tile_n: int = None):
+    """Bin-masked race statistics; ``use_kernel`` routes to the Pallas
+    kernel, else the jnp oracle (bit-identical outputs either way).
+    ``tile_n`` caps the kernel's atom tile (None = kernel default)."""
+    dispatch_counts["binned_race_" + ("pallas" if use_kernel else "xla")] += 1
+    if use_kernel:
+        return gls_binned_race(log_s, log_q, bins, l_max=l_max,
+                               interpret=interpret, tile_n=tile_n)
+    return gls_binned_race_ref(log_s, log_q, bins, l_max=l_max)

@@ -26,6 +26,31 @@ def gls_row_race_ref(log_s: jax.Array, log_q: jax.Array):
             jnp.argmin(score, axis=-1).astype(jnp.int32))
 
 
+def gls_binned_race_ref(log_s: jax.Array, log_q: jax.Array,
+                        bins: jax.Array, *, l_max: int):
+    """Per-(row, sheet, bin) race statistics, the ``gls_binned_race``
+    oracle: (bmin (B, K, l_max) f32, barg (B, K, l_max) i32) of
+    score = log_s - log_q restricted to atoms with ``bins == l``, with
+    -inf log-weights masked to +inf.  A bin with no live atom reports
+    (inf, 0).  The per-bin Python loop mirrors the kernel's unrolled
+    accumulator update so reduction order (and thus tie-breaking) is
+    identical."""
+    score = log_s - log_q
+    score = jnp.where(jnp.isfinite(log_q), score, jnp.inf)
+    mins, args = [], []
+    for l in range(l_max):
+        s_l = jnp.where((bins == l)[:, None, :], score, jnp.inf)
+        # One reduction pass per bin: the min VALUE is the element at the
+        # argmin (exact — min returns one of its inputs), so gather it
+        # instead of paying a second full reduction.  An empty bin (all
+        # +inf) yields argmin 0 and gathers +inf, matching the kernel's
+        # untouched (inf, 0) accumulator.
+        arg = jnp.argmin(s_l, axis=-1).astype(jnp.int32)
+        mins.append(jnp.take_along_axis(s_l, arg[..., None], axis=-1)[..., 0])
+        args.append(arg)
+    return jnp.stack(mins, axis=-1), jnp.stack(args, axis=-1)
+
+
 def gls_race_ref(log_s: jax.Array, log_p: jax.Array, log_q: jax.Array,
                  active: jax.Array):
     """log_s/log_p/log_q: (B, K, N) f32; active: (B, K) bool.

@@ -78,6 +78,59 @@ def test_gls_row_race_bucketed_batches_share_a_kernel():
     assert rb5 == rb7
 
 
+@pytest.mark.parametrize("b,k,n,l_max", [
+    (1, 1, 128, 2),       # minimal
+    (3, 4, 500, 4),       # unaligned atom count (lane padding path)
+    (2, 2, 4100, 8),      # several vocab tiles + padding
+    (9, 3, 2 ** 14, 4),   # the wz-pipeline shape class (row bucketing)
+])
+def test_gls_binned_race_matches_ref(b, k, n, l_max):
+    """The compression kernel must stay BIT-identical to the jnp binned
+    statistics — backend interchangeability of the Wyner–Ziv pipeline
+    depends on it (DESIGN.md §10.4)."""
+    from repro.kernels.gls_race.kernel import gls_binned_race
+    from repro.kernels.gls_race.ref import gls_binned_race_ref
+    key = jax.random.PRNGKey(b * 1000 + n)
+    ks, kq, kb = jax.random.split(key, 3)
+    log_s = jnp.log(jnp.maximum(jax.random.exponential(ks, (b, k, n)),
+                                1e-37))
+    log_q = jax.random.normal(kq, (b, k, n))
+    # Dead atoms (-inf weight) must never win; +inf garbage weights are
+    # equally dead on both implementations (isfinite masking).
+    log_q = jnp.where(jax.random.bernoulli(kq, 0.8, (b, k, n)), log_q,
+                      -jnp.inf)
+    log_q = jnp.where(jax.random.bernoulli(kb, 0.02, (b, k, n)), jnp.inf,
+                      log_q)
+    bins = jax.random.randint(kb, (b, n), 0, l_max)
+    bmin, barg = gls_binned_race(log_s, log_q, bins, l_max=l_max)
+    bmin_r, barg_r = gls_binned_race_ref(log_s, log_q, bins, l_max=l_max)
+    np.testing.assert_array_equal(np.asarray(bmin), np.asarray(bmin_r))
+    np.testing.assert_array_equal(np.asarray(barg), np.asarray(barg_r))
+
+
+def test_gls_binned_race_empty_bin_reports_inf_zero():
+    """A bin with no live atom must come back as the untouched (inf, 0)
+    accumulator on both the kernel and the oracle."""
+    from repro.kernels.gls_race.kernel import gls_binned_race
+    from repro.kernels.gls_race.ref import gls_binned_race_ref
+    b, k, n, l_max = 2, 3, 256, 4
+    key = jax.random.PRNGKey(7)
+    log_s = jnp.log(jnp.maximum(jax.random.exponential(key, (b, k, n)),
+                                1e-37))
+    log_q = jax.random.normal(jax.random.fold_in(key, 1), (b, k, n))
+    bins = jax.random.randint(jax.random.fold_in(key, 2), (b, n), 0, l_max)
+    # Kill every atom of bin 2 (weight -inf), plus bin 3 has no atoms.
+    log_q = jnp.where((bins == 2)[:, None, :], -jnp.inf, log_q)
+    bins = jnp.where(bins == 3, 0, bins)
+    for fn in (gls_binned_race, gls_binned_race_ref):
+        bmin, barg = fn(log_s, log_q, bins, l_max=l_max)
+        assert np.isinf(np.asarray(bmin[:, :, 2])).all()
+        assert (np.asarray(barg[:, :, 2]) == 0).all()
+        assert np.isinf(np.asarray(bmin[:, :, 3])).all()
+        assert (np.asarray(barg[:, :, 3]) == 0).all()
+        assert np.isfinite(np.asarray(bmin[:, :, :2])).all()
+
+
 def test_gls_race_zero_prob_symbols_never_win():
     b, k, n = 2, 3, 256
     key = jax.random.PRNGKey(0)
