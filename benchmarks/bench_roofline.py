@@ -11,13 +11,16 @@ Conventions (see EXPERIMENTS.md §Roofline notes):
   * collective term is loop-aware (while-loop trip counts parsed from the
     HLO and propagated through nesting).
 
-Also microbenches the fused block-verification op (block_verify.py) on
-both backends: the (L+1, K, N) race table is streamed once — ~3 flops
-per cell against 4 bytes of uniforms + 4 of probs — so the op is firmly
-memory-bound and its analytic bytes/flops are emitted alongside measured
-wall-clock.  The "pallas" rows run the gls_race row kernel in interpret
-mode on CPU (this container has no TPU); on-device numbers come from the
-same call with interpret=False.
+Also microbenches the list-coupling hot kernels — the fused block
+verifier (block_verify.py) and the gls_race row/binned kernels — on both
+backends in their DEFAULT execution mode (DESIGN.md §11).  Every kernel
+row reports analytic bytes moved, achieved GB/s, and the fraction of the
+MEMORY-BOUND peak, where the peak is self-calibrated on this host by
+timing a streaming f32 copy (the kernels are all ~O(1) flops/byte, so
+the copy bandwidth IS their roofline).  Timing discipline: every jit in
+the table is warmed before ANY row is timed — a compile riding inside
+another row's timed region is the classic microbenchmark lie — and each
+row reports best-of-N.
 """
 
 from __future__ import annotations
@@ -37,13 +40,41 @@ SWEEP_DIR = os.path.join(os.path.dirname(__file__), "..", "dryrun_results",
                          "sweep")
 
 
-def _verify_block_rows(fast: bool):
-    """Measured + analytic roofline rows for the fused verifier."""
+def _best_of(fn, reps):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _copy_bandwidth(reps: int = 5) -> float:
+    """Self-calibrated memory-bound peak: bytes/s of a streaming f32
+    copy (read + write) big enough to defeat caches."""
+    x = jnp.arange(8 * 2 ** 20, dtype=jnp.float32)   # 32 MiB
+    fn = jax.jit(lambda a: a * 1.0)
+    jax.block_until_ready(fn(x))                     # warm
+    best = _best_of(lambda: fn(x), reps)
+    return 2 * x.nbytes / best
+
+
+def _kernel_cases(fast: bool):
+    """(name, thunk, bytes, flops, extra) rows for the coupling kernels.
+    Thunks close over jitted callables; nothing is timed here."""
+    from repro.kernels.gls_race.ops import (
+        gls_binned_race_op,
+        gls_row_race_op,
+        resolve_race_mode,
+    )
     from repro.specdec.block_verify import block_verify as fused_verify
 
+    mode = resolve_race_mode(None)
+    cases = []
+
+    # Fused block verifier: the (L+1, K, N) race table is streamed once —
+    # ~3 flops per cell against 4 bytes of uniforms + 4 of probs.
     l_n, n = 4, 2048
-    reps = 5 if fast else 20
-    rows = []
     for k in (2, 8):
         kk = jax.random.PRNGKey(0)
         ku, kq, kd = jax.random.split(kk, 3)
@@ -54,21 +85,61 @@ def _verify_block_rows(fast: bool):
         d = jax.random.randint(kd, (k, l_n), 0, n, jnp.int32)
         strat_keys = jax.random.split(kk, l_n + 1)
         cells = (l_n + 1) * k * n
-        bytes_accessed = 2 * 4 * cells          # uniforms + target probs
-        flops = 3 * cells                       # log, sub, min-reduce
         for backend in ("xla", "pallas"):
-            fn = lambda: fused_verify(
-                log_u, d, None, q, strat_keys, strategy="gls",
-                backend=backend).tokens.block_until_ready()
-            fn()  # warmup/compile
-            t0 = time.perf_counter()
-            for _ in range(reps):
-                fn()
-            us = (time.perf_counter() - t0) * 1e6 / reps
-            rows.append((f"verify_block_{backend}_K{k}", us,
-                         f"bytes={bytes_accessed};flops={flops};"
-                         f"intensity={flops / bytes_accessed:.2f};"
-                         f"L={l_n};N={n};interpret=True"))
+            cases.append((
+                f"verify_block_{backend}_K{k}",
+                lambda lu=log_u, dd=d, qq=q, sk=strat_keys, be=backend:
+                    fused_verify(lu, dd, None, qq, sk, strategy="gls",
+                                 backend=be).tokens,
+                2 * 4 * cells, 3 * cells,
+                f"L={l_n};N={n};mode={mode}"))
+
+    # Race kernels at the WZ-pipeline shape: (B, K, N) f32 score + weight
+    # streams (plus the (B, N) i32 bin map for the binned op).
+    b, k, n, l_max = (128, 2, 2 ** 13, 4) if fast else (256, 2, 2 ** 14, 4)
+    kk = jax.random.PRNGKey(1)
+    ks_, kq_, kb_ = jax.random.split(kk, 3)
+    log_s = jnp.log(jax.random.uniform(
+        ks_, (b, k, n), minval=np.finfo(np.float32).tiny, maxval=1.0))
+    log_q = jax.random.normal(kq_, (b, k, n))
+    bins = jax.random.randint(kb_, (b, n), 0, l_max, jnp.int32)
+    row_bytes = 2 * 4 * b * k * n
+    bin_bytes = (2 * b * k * n + b * n) * 4
+    for use_kernel, tag in ((True, "pallas"), (False, "xla")):
+        cases.append((
+            f"gls_row_race_{tag}",
+            lambda uk=use_kernel: gls_row_race_op(log_s, log_q,
+                                                  use_kernel=uk),
+            row_bytes, 2 * b * k * n,
+            f"B={b};K={k};N={n};mode={mode if use_kernel else 'xla'}"))
+        cases.append((
+            f"gls_binned_race_{tag}",
+            lambda uk=use_kernel: gls_binned_race_op(
+                log_s, log_q, bins, l_max=l_max, use_kernel=uk),
+            bin_bytes, 3 * b * k * n,
+            f"B={b};K={k};N={n};l_max={l_max};"
+            f"mode={mode if use_kernel else 'xla'}"))
+    return cases
+
+
+def _kernel_rows(fast: bool):
+    """Measured + analytic roofline rows for the coupling kernels: warm
+    everything, calibrate the memory roof, then time."""
+    cases = _kernel_cases(fast)
+    for _, thunk, _, _, _ in cases:       # warm ALL jits first
+        jax.block_until_ready(thunk())
+    peak = _copy_bandwidth()
+    reps = 5 if fast else 20
+    rows = []
+    for name, thunk, bytes_moved, flops, extra in cases:
+        dt = _best_of(thunk, reps)
+        gbps = bytes_moved / dt / 1e9
+        rows.append((name, dt * 1e6,
+                     f"bytes={bytes_moved};gbps={gbps:.2f};"
+                     f"pct_mem_peak={100 * bytes_moved / dt / peak:.1f};"
+                     f"intensity={flops / bytes_moved:.2f};{extra}"))
+    rows.append(("copy_bandwidth_peak", 0.0,
+                 f"gbps={peak / 1e9:.2f};bytes={2 * 8 * 2 ** 20 * 4}"))
     return rows
 
 
@@ -92,9 +163,12 @@ def run(fast: bool = False):
     if not rows:
         emit("roofline_missing", 0.0,
              "run repro.launch.sweep first (dryrun_results/sweep)")
-    for name, us, derived in _verify_block_rows(fast):
+    kernel_rows = _kernel_rows(fast)
+    for name, us, derived in kernel_rows:
         emit(name, us, derived)
-    return rows
+    return {"sweep": rows,
+            "kernels": [{"name": n, "us": us, "derived": d}
+                        for n, us, d in kernel_rows]}
 
 
 if __name__ == "__main__":

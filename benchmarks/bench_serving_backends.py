@@ -31,6 +31,15 @@ Three comparisons the serving refactor is accountable for:
     per-request path re-compiles per fresh length, which is exactly the
     production TTFT story this bench exists to track.
 
+Two §11 additions ride along in the payload:
+
+  * ``quant`` — kv_fused tokens/s with f32 arenas vs the int8 KV arena
+    + W8A8 verify path, and per-strategy acceptance-rate deltas across
+    all six strategies (the quant ship gate: CI fails on a delta beyond
+    statistical tolerance, NOT on logit drift);
+  * ``race_dispatches`` — trace-time race-kernel dispatch counts per
+    fused round, per strategy (kernels/gls_race/ops.py counters).
+
 ``collect()`` returns the JSON payload CI archives as BENCH_specdec.json.
 """
 
@@ -43,6 +52,8 @@ from benchmarks.bench_table1_iid_drafts import collect as table1_collect
 from benchmarks.common import emit
 from benchmarks.lm_pair import bench_prompts, get_pair
 from repro.specdec import (
+    RACE_STRATEGIES,
+    RS_STRATEGIES,
     CachedSpecDecEngine,
     SpecDecConfig,
     SpecDecEngine,
@@ -173,6 +184,83 @@ def _bench_scheduler(target, drafter, *, n_requests=8, max_new=MAX_NEW):
     return out
 
 
+def _bench_quant(target, drafter, *, n_requests=8, max_new=MAX_NEW):
+    """Quantized serving (DESIGN.md §11): kv_fused tokens/s with the f32
+    arenas vs the int8 KV arena + W8A8 verify path, plus the gate that
+    decides whether quant ships — per-strategy acceptance-rate deltas
+    (quantization moves logits by design; acceptance is the coupling
+    statistic the paper cares about)."""
+    corpus = bench_prompts(n_requests, length=12)
+    out = {}
+    for tag, quant in (("f32", False), ("int8", True)):
+        sd = SpecDecConfig(num_drafts=4, draft_len=L, strategy="gls",
+                           top_k=50, max_new_tokens=max_new, quant=quant)
+        eng = CachedSpecDecEngine(target, drafter, sd,
+                                  pool_slots=SCHED_BATCH)
+
+        def make_server():
+            return SpecDecServer(eng, max_batch=SCHED_BATCH,
+                                 cache_mode="kv_fused")
+
+        warm = make_server()
+        for p in corpus[:SCHED_BATCH]:
+            warm.submit(p, max_new=max_new)
+        warm.run(jax.random.PRNGKey(3))
+        server = make_server()
+        for p in corpus:
+            server.submit(p, max_new=max_new)
+        server.run(jax.random.PRNGKey(7))
+        out[tag] = {"tokens_per_s": server.metrics.tokens_per_s}
+    out["quant_speedup"] = (out["int8"]["tokens_per_s"]
+                            / max(out["f32"]["tokens_per_s"], 1e-9))
+
+    accept = {}
+    for strategy in RACE_STRATEGIES + RS_STRATEGIES:
+        rates = {}
+        for tag, quant in (("f32", False), ("int8", True)):
+            sd = SpecDecConfig(num_drafts=4, draft_len=L,
+                               strategy=strategy, top_k=50,
+                               max_new_tokens=max_new, quant=quant)
+            eng = CachedSpecDecEngine(target, drafter, sd, pool_slots=1)
+            acc = blocks = 0
+            for seed in (5, 6):   # shared keys across tags: the residual
+                st = eng.generate(jax.random.PRNGKey(seed), corpus[0],
+                                  max_new=max_new, fused=True)
+                acc += st.accepted_drafts
+                blocks += st.blocks
+            rates[tag] = acc / (blocks * L)
+        accept[strategy] = {**rates,
+                            "delta": rates["int8"] - rates["f32"]}
+    out["acceptance"] = accept
+    out["max_acceptance_delta"] = float(
+        max(abs(v["delta"]) for v in accept.values()))
+    return out
+
+
+def _race_dispatch_counts(target, drafter, *, max_new=16):
+    """Per-round race-kernel dispatch structure per strategy: trace-time
+    counters from kernels/gls_race/ops.py over one fused-engine
+    generation (each engine retraces its own round program, so the
+    counts are the round's embedded dispatches).  The pallas verifier
+    backend is pinned — it is the one that routes through the race ops;
+    RS strategies embed no race dispatch on any backend, which the
+    empty counters document."""
+    from repro.kernels.gls_race import ops
+    prompt = bench_prompts(1, length=12)[0]
+    counts = {}
+    for strategy in RACE_STRATEGIES + RS_STRATEGIES:
+        sd = SpecDecConfig(num_drafts=4, draft_len=L, strategy=strategy,
+                           top_k=50, max_new_tokens=max_new,
+                           verifier_backend="pallas")
+        eng = CachedSpecDecEngine(target, drafter, sd, pool_slots=1)
+        ops.reset_dispatch_counts()
+        st = eng.generate(jax.random.PRNGKey(9), prompt,
+                          max_new=max_new, fused=True)
+        counts[strategy] = {"per_round": dict(ops.dispatch_counts),
+                            "rounds": st.blocks}
+    return counts
+
+
 def collect(fast: bool = True):
     """BENCH_specdec.json payload: BE + tokens/s for gls vs specinfer vs
     spectr at K in {2, 8}, backend deltas, scheduler path deltas."""
@@ -194,6 +282,8 @@ def collect(fast: bool = True):
         "verifier_backends": _bench_backends(max_new=max_new),
         "scheduler": _bench_scheduler(target, drafter, max_new=max_new),
         "admission": _bench_admission(target, drafter, max_new=max_new),
+        "quant": _bench_quant(target, drafter, max_new=max_new),
+        "race_dispatches": _race_dispatch_counts(target, drafter),
     }
 
 
@@ -229,6 +319,15 @@ def run(fast: bool = False):
     emit("admission_bit_identical", 0.0, str(adm["bit_identical"]))
     emit("admission_ttft_improvement", 0.0,
          f"{adm['ttft_improvement']:.2f}x")
+    qn = payload["quant"]
+    emit("serving_quant_kv_fused", 0.0,
+         f"f32_tok_s={qn['f32']['tokens_per_s']:.1f};"
+         f"int8_tok_s={qn['int8']['tokens_per_s']:.1f};"
+         f"speedup={qn['quant_speedup']:.2f}x;"
+         f"max_accept_delta={qn['max_acceptance_delta']:.3f}")
+    for strategy, rd in payload["race_dispatches"].items():
+        emit(f"race_dispatches_{strategy}", 0.0,
+             f"per_round={rd['per_round']};rounds={rd['rounds']}")
     return payload
 
 

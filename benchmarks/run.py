@@ -3,14 +3,16 @@ Prints ``name,us_per_call,derived`` CSV (harness contract).
 
 Set REPRO_BENCH_FAST=0 for the full (slower) configurations.
 
-``--quick`` runs the spec-dec serving benchmark plus the batched
-Wyner–Ziv pipeline benchmark and writes their JSON payload (block
-efficiency + tokens/s for gls vs specinfer vs spectr at K in {2, 8},
-verifier-backend host-sync deltas, batched-vs-sequential scheduler
-tokens/s, and the ``wz_pipeline`` rows: samples/s for loop vs xla vs
-pallas, xla↔pallas equality, Prop.-4 match bound) to BENCH_specdec.json
-— the artifact CI archives so the perf trajectory is tracked per
-commit.
+``--quick`` runs the spec-dec serving benchmark, the batched Wyner–Ziv
+pipeline benchmark, and the kernel-roofline microbench, and writes their
+merged JSON payload (block efficiency + tokens/s for gls vs specinfer
+vs spectr at K in {2, 8}, verifier-backend host-sync deltas,
+batched-vs-sequential scheduler tokens/s, quant-vs-f32 serving deltas,
+per-strategy race-dispatch counts, the ``wz_pipeline`` rows — samples/s
+for loop vs xla vs pallas, xla↔pallas equality, Prop.-4 match bound —
+and the ``roofline_kernels`` rows with bytes-moved / achieved-GB/s /
+%-of-memory-peak per coupling kernel) to BENCH_specdec.json — the
+artifact CI archives so the perf trajectory is tracked per commit.
 """
 
 from __future__ import annotations
@@ -27,9 +29,14 @@ FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
 
 def quick(out_path: str) -> None:
-    from benchmarks import bench_serving_backends, bench_wz_pipeline
+    from benchmarks import (
+        bench_roofline,
+        bench_serving_backends,
+        bench_wz_pipeline,
+    )
     payload = bench_serving_backends.run(fast=True)
     payload["wz_pipeline"] = bench_wz_pipeline.run(fast=True)
+    payload["roofline_kernels"] = bench_roofline.run(fast=True)["kernels"]
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {out_path}")

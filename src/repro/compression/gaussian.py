@@ -29,6 +29,7 @@ import numpy as np
 from repro.compression.pipeline import chunked_batch_map, wz_round_batch
 from repro.compression.wz import make_bins, wz_round
 from repro.core.bounds import wz_error_upper_bound
+from repro.kernels.gls_race.ops import resolve_race_mode
 
 _LN2 = float(np.log(2.0))
 
@@ -105,14 +106,22 @@ def simulate_trial(key: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
 # intermediates ((chunk, K, N) score tables) stay cache-resident on CPU
 # hosts instead of thrashing through tens of MB per pass.  Chunks
 # sequence INSIDE the jitted program — still one host dispatch per
-# batch.  The pallas backend keeps the single full-batch kernel: its
-# VMEM tiling already bounds the working set, and the one-kernel-
-# dispatch-per-batch contract is load-bearing there (DESIGN.md §10.4).
+# batch.  On TPU/GPU the pallas backend keeps the single full-batch
+# kernel: its VMEM tiling already bounds the working set, and the
+# one-kernel-dispatch-per-batch contract is load-bearing there
+# (DESIGN.md §10.4).
 _DEVICE_CHUNK = 32
+# The pallas backend's CPU-fallback leg (sequenced row races, DESIGN.md
+# §11) runs with a batch-fitted chunk the same way the kernel runs with
+# batch-fitted grids: finer chunks keep the (chunk, K, N) race tables
+# cache-resident through the two sequenced reductions — measured ~10%
+# over the 32-wide default at the bench shapes (B=256, N=2^14, K=2).
+_FALLBACK_CHUNK = 8
 
 
 def _batch_trials(keys: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
-                  shared_sheet: bool, backend: str, interpret: bool,
+                  shared_sheet: bool, backend: str,
+                  interpret: bool | None = None,
                   tile_n: int = None):
     """A batch of trials as ONE device program: vmapped weight models
     feeding ``wz_round_batch`` (one race dispatch on the pallas path),
@@ -142,10 +151,15 @@ def _batch_trials(keys: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
         return code.match, jnp.min(sq, axis=1), info_bits
 
     b = keys.shape[0]
-    if backend == "xla" and b > _DEVICE_CHUNK and b % _DEVICE_CHUNK == 0:
+    if backend == "xla":
+        width = _DEVICE_CHUNK
+    elif resolve_race_mode(interpret) == "fallback":
+        width = _FALLBACK_CHUNK
+    else:
+        width = None            # compiled/interpret: one full-batch kernel
+    if width and b > width and b % width == 0:
         outs = jax.lax.map(
-            chunk, keys.reshape(b // _DEVICE_CHUNK, _DEVICE_CHUNK,
-                                *keys.shape[1:]))
+            chunk, keys.reshape(b // width, width, *keys.shape[1:]))
         return jax.tree_util.tree_map(
             lambda x: x.reshape(b, *x.shape[2:]), outs)
     return chunk(keys)
@@ -153,7 +167,7 @@ def _batch_trials(keys: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
 
 def run_experiment(key: jax.Array, cfg: GaussianWZ, k: int, l_max: int,
                    trials: int, shared_sheet: bool = False, *,
-                   backend: str = "xla", interpret: bool = True,
+                   backend: str = "xla", interpret: bool | None = None,
                    batch_size: int = 512):
     """Batched trials through the Wyner–Ziv pipeline.
 

@@ -178,7 +178,7 @@ def train_vae(key, images: np.ndarray, cfg: VAETrainConfig, log=print):
 
 def compress_batch(keys, params, sources, crops, *, n_atoms: int,
                    l_max: int, k: int, shared_sheet: bool = False,
-                   backend: str = "xla", interpret: bool = True):
+                   backend: str = "xla", interpret: bool | None = None):
     """Compress B sources (B,28,14) for K decoders each (crops
     (B,K,7,7); keys (B,)) as one device program.
 
@@ -229,7 +229,7 @@ def compress_batch(keys, params, sources, crops, *, n_atoms: int,
 
 def compress_image(key, params, source, crops, *, n_atoms: int,
                    l_max: int, k: int, shared_sheet: bool = False,
-                   backend: str = "xla", interpret: bool = True):
+                   backend: str = "xla", interpret: bool | None = None):
     """Compress ONE source (28,14) for K decoders with crops (K,7,7) —
     the B=1 lane of ``compress_batch`` (bit-identical RNG: vmapped
     jax.random ops equal their unbatched per-lane results).
@@ -245,7 +245,7 @@ def compress_image(key, params, source, crops, *, n_atoms: int,
 def evaluate_rd(key, params, images: np.ndarray, *, n_atoms: int = 512,
                 l_max: int = 16, k: int = 2, trials: int = 128,
                 shared_sheet: bool = False, seed: int = 0,
-                backend: str = "xla", interpret: bool = True,
+                backend: str = "xla", interpret: bool | None = None,
                 batch_size: int = 64):
     """Rate-distortion point over `trials` random test images.
 

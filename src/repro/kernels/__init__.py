@@ -2,8 +2,15 @@
 
 Each kernel directory holds kernel.py (pl.pallas_call + BlockSpec),
 ops.py (jit'd wrapper with jnp fallback) and ref.py (pure-jnp oracle).
-All are validated in interpret=True mode on CPU; on TPU pass
-interpret=False.
+
+Execution mode (DESIGN.md §11.1): every entry point takes
+``interpret: bool | None = None``, resolved by
+``kernels.pallas_mode.resolve_pallas_mode`` — ``None`` runs COMPILED
+Pallas on backends that lower it (TPU/GPU) and the bit-identical jitted
+reference elsewhere; ``True`` forces interpret mode (the CPU test mode
+— it executes the same kernel body that compiles on device); ``False``
+forces compiled, failing loudly on unsupported backends.  Callers
+should leave the default alone.
 """
 
 from repro.kernels.decode_attention.ops import decode_attention_op

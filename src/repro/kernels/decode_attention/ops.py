@@ -1,4 +1,8 @@
-"""jit'd public wrapper for decode attention with a jnp fallback."""
+"""jit'd public wrapper for decode attention with a jnp fallback.
+
+``interpret=None`` autodetects per ``resolve_pallas_mode`` (compiled on
+TPU/GPU, jnp reference elsewhere); ``k_scale``/``v_scale`` pass through
+for int8 KV arenas."""
 
 from __future__ import annotations
 
@@ -8,8 +12,10 @@ from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
-def decode_attention_op(q, k, v, kv_len, *, use_kernel: bool = True,
-                        interpret: bool = True):
+def decode_attention_op(q, k, v, kv_len, k_scale=None, v_scale=None, *,
+                        use_kernel: bool = True,
+                        interpret: bool | None = None):
     if use_kernel:
-        return decode_attention(q, k, v, kv_len, interpret=interpret)
-    return jax.jit(decode_attention_ref)(q, k, v, kv_len)
+        return decode_attention(q, k, v, kv_len, k_scale, v_scale,
+                                interpret=interpret)
+    return jax.jit(decode_attention_ref)(q, k, v, kv_len, k_scale, v_scale)

@@ -1,5 +1,6 @@
 """Pure-jnp oracle for single-token GQA decode attention over a KV cache
-with a valid-prefix length."""
+with a valid-prefix length.  Accepts optional per-KV-vector dequant
+scales so int8 KV arenas (DESIGN.md §11) share one reference."""
 
 from __future__ import annotations
 
@@ -8,17 +9,26 @@ import jax.numpy as jnp
 
 
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
-                         kv_len: jax.Array) -> jax.Array:
+                         kv_len: jax.Array, k_scale: jax.Array = None,
+                         v_scale: jax.Array = None) -> jax.Array:
     """q: (B, H, D) one query per head; k/v: (B, Hkv, T, D);
-    kv_len: (B,) valid prefix length.  Returns (B, H, D)."""
+    kv_len: (B,) valid prefix length.  Returns (B, H, D).
+
+    ``k_scale``/``v_scale`` (B, Hkv, T, 1), both or neither: dequant
+    scales for int8 k/v — ``k_f32 = k * k_scale`` before the math."""
     b, h, d = q.shape
     hkv, t = k.shape[1], k.shape[2]
     g = h // hkv
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale
+        vf = vf * v_scale
     qr = q.reshape(b, hkv, g, d).astype(jnp.float32)
-    scores = jnp.einsum("bhgd,bhtd->bhgt", qr, k.astype(jnp.float32))
+    scores = jnp.einsum("bhgd,bhtd->bhgt", qr, kf)
     scores = scores / jnp.sqrt(d)
     valid = jnp.arange(t)[None, :] < kv_len[:, None]     # (B, T)
     scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhgt,bhtd->bhgd", w, v.astype(jnp.float32))
+    out = jnp.einsum("bhgt,bhtd->bhgd", w, vf)
     return out.reshape(b, h, d).astype(q.dtype)

@@ -14,6 +14,12 @@ row's first query) and ``kv_len`` (valid KV prefix length) as SMEM
 scalars — the same per-row masking contract as the dense
 ``layers.attention`` path and the decode-attention kernel.  Rows whose
 queries are entirely masked (bucket padding) emit zeros, not NaN.
+
+int8 KV arenas (DESIGN.md §11) pass per-KV-vector scales ``k_scale`` /
+``v_scale`` (B, Hkv, T, 1), dequantized in-kernel tile by tile so the
+HBM stream stays int8.  Execution mode follows ``resolve_pallas_mode``:
+``interpret=None`` compiles on TPU/GPU and falls back to the
+bit-for-bit jnp reference elsewhere.
 """
 
 from __future__ import annotations
@@ -25,13 +31,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.pallas_mode import resolve_pallas_mode
+
 DEFAULT_TQ = 256
 DEFAULT_TK = 256
 
 
-def _kernel(q_off_ref, kv_len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, tq: int, tk: int, n_kv: int,
-            causal: bool, window: int, t_real: int):
+def _kernel(q_off_ref, kv_len_ref, q_ref, k_ref, v_ref, *refs,
+            tq: int, tk: int, n_kv: int,
+            causal: bool, window: int, t_real: int, quant: bool):
+    if quant:
+        k_s_ref, v_s_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -44,6 +57,9 @@ def _kernel(q_off_ref, kv_len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32)      # (TQ, D)
     k = k_ref[0, 0].astype(jnp.float32)      # (TK, D)
     v = v_ref[0, 0].astype(jnp.float32)
+    if quant:
+        k = k * k_s_ref[0, 0]                # (TK, 1) broadcasts over D
+        v = v * v_s_ref[0, 0]
     d = q.shape[-1]
     q_off = q_off_ref[0]
     kv_len = kv_len_ref[0]
@@ -81,16 +97,25 @@ def _kernel(q_off_ref, kv_len_ref, q_ref, k_ref, v_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("causal", "window", "tq", "tk",
                                              "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                    q_offset: jax.Array = None, kv_len: jax.Array = None, *,
+                    q_offset: jax.Array = None, kv_len: jax.Array = None,
+                    k_scale: jax.Array = None, v_scale: jax.Array = None, *,
                     causal: bool = True, window: int = 0,
                     tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q: (B, H, S, D); k/v: (B, Hkv, T, D) -> (B, H, S, D).
 
     ``q_offset``/``kv_len`` are optional (B,) i32 per-row masks: row b's
     queries sit at positions ``q_offset[b] + arange(S)`` and attend only
     keys below ``kv_len[b]`` (defaults: offset 0, full T).
+    ``k_scale``/``v_scale`` (B, Hkv, T, 1), both or neither: per-KV-vector
+    dequant scales for int8 k/v, applied in-kernel tile by tile.
     """
+    assert (k_scale is None) == (v_scale is None)
+    quant = k_scale is not None
+    mode = resolve_pallas_mode(interpret)
+    if mode == "fallback":
+        return flash_attention_ref(q, k, v, q_offset, kv_len, k_scale,
+                                   v_scale, causal=causal, window=window)
     b, h, s, d = q.shape
     hkv, t = k.shape[1], k.shape[2]
     g = h // hkv
@@ -103,6 +128,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         kpad = tk - t % tk
         k = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+        if quant:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, kpad), (0, 0)))
     s_pad, t_pad = q.shape[2], k.shape[2]
     n_q, n_kv = s_pad // tq, t_pad // tk
     if q_offset is None:
@@ -113,21 +141,32 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
 
     kernel = functools.partial(_kernel, tq=tq, tk=tk, n_kv=n_kv,
-                               causal=causal, window=window, t_real=t)
+                               causal=causal, window=window, t_real=t,
+                               quant=quant)
+    in_specs = [
+        pl.BlockSpec((1,), lambda b_, h_, iq, ik: (b_,),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1,), lambda b_, h_, iq, ik: (b_,),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1, tq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        pl.BlockSpec((1, 1, tk, d),
+                     lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+        pl.BlockSpec((1, 1, tk, d),
+                     lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+    ]
+    operands = [q_offset, kv_len, q, k, v]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1, tk, 1),
+                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, tk, 1),
+                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+        ]
+        operands += [k_scale, v_scale]
     out = pl.pallas_call(
         kernel,
         grid=(b, h, n_q, n_kv),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b_, h_, iq, ik: (b_,),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1,), lambda b_, h_, iq, ik: (b_,),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, tq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
-            pl.BlockSpec((1, 1, tk, d),
-                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
-            pl.BlockSpec((1, 1, tk, d),
-                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, tq, d),
                                lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
@@ -136,6 +175,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((tq, 1), jnp.float32),   # running denom l
             pltpu.VMEM((tq, d), jnp.float32),   # running numerator acc
         ],
-        interpret=interpret,
-    )(q_offset, kv_len, q, k, v)
+        interpret=(mode == "interpret"),
+    )(*operands)
     return out[:, :, :s]

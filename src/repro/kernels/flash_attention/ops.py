@@ -1,4 +1,8 @@
-"""jit'd public wrapper for flash attention with a jnp fallback."""
+"""jit'd public wrapper for flash attention with a jnp fallback.
+
+``interpret=None`` autodetects per ``resolve_pallas_mode`` (compiled on
+TPU/GPU, jnp reference elsewhere); ``k_scale``/``v_scale`` pass through
+for int8 KV arenas."""
 
 from __future__ import annotations
 
@@ -10,11 +14,13 @@ from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
-def flash_attention_op(q, k, v, q_offset=None, kv_len=None, *, causal=True,
-                       window=0, use_kernel: bool = True,
-                       interpret: bool = True):
+def flash_attention_op(q, k, v, q_offset=None, kv_len=None, k_scale=None,
+                       v_scale=None, *, causal=True, window=0,
+                       use_kernel: bool = True,
+                       interpret: bool | None = None):
     if use_kernel:
-        return flash_attention(q, k, v, q_offset, kv_len, causal=causal,
-                               window=window, interpret=interpret)
+        return flash_attention(q, k, v, q_offset, kv_len, k_scale, v_scale,
+                               causal=causal, window=window,
+                               interpret=interpret)
     fn = functools.partial(flash_attention_ref, causal=causal, window=window)
-    return jax.jit(fn)(q, k, v, q_offset, kv_len)
+    return jax.jit(fn)(q, k, v, q_offset, kv_len, k_scale, v_scale)

@@ -1,5 +1,7 @@
 """Pure-jnp oracle for the flash-attention prefill kernel: exact GQA
-attention with causal, sliding-window, and per-row offset masking."""
+attention with causal, sliding-window, and per-row offset masking.
+Accepts optional per-KV-vector dequant scales so int8 KV arenas
+(DESIGN.md §11) share one reference."""
 
 from __future__ import annotations
 
@@ -11,17 +13,26 @@ import jax.numpy as jnp
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         q_offset: Optional[jax.Array] = None,
-                        kv_len: Optional[jax.Array] = None, *,
+                        kv_len: Optional[jax.Array] = None,
+                        k_scale: Optional[jax.Array] = None,
+                        v_scale: Optional[jax.Array] = None, *,
                         causal: bool = True, window: int = 0) -> jax.Array:
     """q: (B, H, S, D); k/v: (B, Hkv, T, D).  f32 math, returns q.dtype.
 
     ``q_offset``/``kv_len``: optional (B,) i32 per-row masks mirroring
-    the kernel's arena-prefill contract (defaults: offset 0, full T)."""
+    the kernel's arena-prefill contract (defaults: offset 0, full T).
+    ``k_scale``/``v_scale`` (B, Hkv, T, 1), both or neither: dequant
+    scales for int8 k/v — ``k_f32 = k * k_scale`` before the math."""
     b, h, s, d = q.shape
     hkv, t = k.shape[1], k.shape[2]
     g = h // hkv
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale
+        vf = vf * v_scale
     qr = q.reshape(b, hkv, g, s, d).astype(jnp.float32)
-    scores = jnp.einsum("bhgsd,bhtd->bhgst", qr, k.astype(jnp.float32))
+    scores = jnp.einsum("bhgsd,bhtd->bhgst", qr, kf)
     scores = scores / jnp.sqrt(d)
     q_off = (jnp.zeros((b,), jnp.int32) if q_offset is None
              else jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,)))
@@ -37,5 +48,5 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     w = jnp.where(jnp.isnan(w), 0.0, w)
-    out = jnp.einsum("bhgst,bhtd->bhgsd", w, v.astype(jnp.float32))
+    out = jnp.einsum("bhgst,bhtd->bhgsd", w, vf)
     return out.reshape(b, h, s, d).astype(q.dtype)

@@ -26,6 +26,14 @@ reuses the row-race tiling but keeps ``l_max`` running (min, argmin)
 accumulators per (row, sheet) — one per bin id — so a single pass over
 the atom axis resolves the encoder race and every bin-masked decoder
 race of a batched compression round.
+
+Execution-mode contract (DESIGN.md §11): every public entry point takes
+``interpret: bool | None``.  ``None`` (the default) autodetects — the
+kernel compiles on backends with Pallas lowering (TPU/GPU) and falls
+back to the bit-identical jnp reference elsewhere (CPU), so callers
+never hard-code the mode.  ``True`` forces the Pallas interpreter (the
+kernel BODY runs on any backend — what the kernel-vs-ref tests
+exercise); ``False`` forces compiled lowering.
 """
 
 from __future__ import annotations
@@ -36,6 +44,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gls_race.ref import (
+    gls_binned_race_ref,
+    gls_race_ref,
+    gls_row_race_ref,
+)
+from repro.kernels.pallas_mode import has_compiled_pallas, resolve_pallas_mode
 
 DEFAULT_TILE_N = 2048
 # Per-operand VMEM budget for one (ROW_BLOCK, K, TILE_N) f32 input block.
@@ -48,6 +63,14 @@ _ROW_BLOCK = 8
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def resolve_race_mode(interpret: bool | None = None) -> str:
+    """Race-family alias of ``pallas_mode.resolve_pallas_mode``:
+    "compiled" | "interpret" | "fallback" (the fallback is bit-identical
+    to the kernel, so the switch is observable only through timing and
+    dispatch accounting)."""
+    return resolve_pallas_mode(interpret)
 
 
 def _kernel(log_s_ref, log_p_ref, log_q_ref, active_ref,
@@ -146,8 +169,12 @@ def _binned_kernel(log_s_ref, log_q_ref, bins_ref,
     serves the encoder race (min over sheets and bins) AND all K
     bin-masked decoder races (slice the winning bin afterwards) —
     DESIGN.md §10.2.  ``l_max`` is static and small (the rate is
-    ``log2 l_max`` bits, ≤ 6 in every paper configuration), so the bin
-    loop unrolls at trace time.
+    ``log2 l_max`` bits, ≤ 6 in every paper configuration), so the
+    demux broadcasts over a bin axis instead of looping: one masked
+    (RB, K, l_max, TILE_N) select, ONE (min, argmin) reduction over the
+    atom lane, one accumulator update — a single sweep regardless of
+    ``l_max``, where the per-bin loop paid ``l_max`` reduction passes
+    over the same tile.
     """
     t = pl.program_id(1)
 
@@ -164,15 +191,23 @@ def _binned_kernel(log_s_ref, log_q_ref, bins_ref,
     # isfinite, not `> -inf`: +inf garbage weights must stay dead on the
     # kernel exactly as on gls_binned_race_ref (bit-interchangeability).
     score = jnp.where(jnp.isfinite(log_q), score, jnp.inf)
-    for l in range(l_max):
-        in_bin = (bins == l)[:, None, :]                 # (RB, 1, TILE_N)
-        s_l = jnp.where(in_bin, score, jnp.inf)
-        tile_min = jnp.min(s_l, axis=2)                  # (RB, K)
-        tile_arg = jnp.argmin(s_l, axis=2).astype(jnp.int32)
-        tile_idx = t * tile_n + tile_arg
-        better = tile_min < bmin_ref[:, :, l]
-        bmin_ref[:, :, l] = jnp.where(better, tile_min, bmin_ref[:, :, l])
-        barg_ref[:, :, l] = jnp.where(better, tile_idx, barg_ref[:, :, l])
+    rb, k, _ = score.shape
+    # Atom -> bin demux as one broadcast compare against the bin-id iota
+    # (broadcasted_iota: 1D iota does not lower on TPU).  The atom axis
+    # stays the lane dimension, so the reduction below vectorizes the
+    # same way the row race does.
+    bin_ids = jax.lax.broadcasted_iota(bins.dtype, (rb, k, l_max, tile_n), 2)
+    s_all = jnp.where(bins[:, None, None, :] == bin_ids,
+                      score[:, :, None, :], jnp.inf)
+    tile_min = jnp.min(s_all, axis=3)                    # (RB, K, l_max)
+    tile_arg = jnp.argmin(s_all, axis=3).astype(jnp.int32)
+    tile_idx = t * tile_n + tile_arg
+    # Strict < keeps cross-tile ties on the earlier tile; argmin keeps
+    # in-tile ties on the lower lane — global ties break toward the
+    # lower atom index, exactly like the reference.
+    better = tile_min < bmin_ref[...]
+    bmin_ref[...] = jnp.where(better, tile_min, bmin_ref[...])
+    barg_ref[...] = jnp.where(better, tile_idx, barg_ref[...])
 
     @pl.when(t == n_tiles - 1)
     def _emit():
@@ -180,20 +215,27 @@ def _binned_kernel(log_s_ref, log_q_ref, bins_ref,
         barg_out_ref[...] = barg_ref[...]
 
 
-def _row_race_tiling(b: int, k: int, n: int, tile_n: int):
+def _row_race_tiling(b: int, k: int, n: int, tile_n: int, vmem_mult: int = 1):
     """(tile_n, row_block, b_pad): lane-aligned vocab tile no larger than
     the (padded) vocab, and the largest row block that keeps one f32
     input operand inside the VMEM budget — bucketing B so every batch
-    size in a bucket shares one compiled kernel."""
+    size in a bucket shares one compiled kernel (the grid is batch-
+    fitted: ``b_pad // rb`` programs, never a fixed overcount).
+
+    ``vmem_mult`` scales the budgeted working set for kernels whose
+    largest live tile is a multiple of the input block — the binned
+    race's single-sweep demux materializes (RB, K, l_max, TILE_N), so it
+    budgets with ``vmem_mult=l_max``."""
     tile_n = min(tile_n, _round_up(n, 128))
-    rb = max(1, _ROW_VMEM_BYTES // (k * tile_n * 4))
+    rb = max(1, _ROW_VMEM_BYTES // (k * tile_n * 4 * vmem_mult))
     rb = min(rb, _ROW_BLOCK)
     return tile_n, rb, _round_up(b, rb)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
 def gls_row_race(log_s: jax.Array, log_q: jax.Array, *,
-                 tile_n: int = DEFAULT_TILE_N, interpret: bool = True):
+                 tile_n: int = DEFAULT_TILE_N,
+                 interpret: bool | None = None):
     """Per-row GLS race statistics.  log_s/log_q: (B, K, N) f32.
 
     Returns (rmin (B, K) f32, rarg (B, K) i32): the minimum race time and
@@ -201,11 +243,17 @@ def gls_row_race(log_s: jax.Array, log_q: jax.Array, *,
     marks zero-probability symbols (never win).  Ties break toward the
     lower vocab index, matching ``jnp.argmin``.
 
+    ``interpret=None`` autodetects per ``resolve_race_mode`` — compiled
+    Pallas on TPU/GPU, the bit-identical ``gls_row_race_ref`` elsewhere.
+
     ``tile_n`` is an upper bound: the actual vocab tile shrinks to the
     lane-aligned vocabulary so small vocabs are not padded to the 2048
     default, and batch rows are blocked/bucketed per ``_row_race_tiling``
     (rows are independent, so padding rows changes no live output).
     """
+    mode = resolve_race_mode(interpret)
+    if mode == "fallback":
+        return gls_row_race_ref(log_s, log_q)
     b, k, n = log_s.shape
     tile_n, rb, b_pad = _row_race_tiling(b, k, n, tile_n)
     pad_n = _round_up(n, tile_n) - n
@@ -236,7 +284,7 @@ def gls_row_race(log_s: jax.Array, log_q: jax.Array, *,
             pltpu.VMEM((rb, k), jnp.float32),   # running row minima
             pltpu.VMEM((rb, k), jnp.int32),     # running row argmins
         ],
-        interpret=interpret,
+        interpret=(mode == "interpret"),
     )(log_s, log_q)
     return rmin[:b], rarg[:b]
 
@@ -245,7 +293,7 @@ def gls_row_race(log_s: jax.Array, log_q: jax.Array, *,
                    static_argnames=("l_max", "tile_n", "interpret"))
 def gls_binned_race(log_s: jax.Array, log_q: jax.Array, bins: jax.Array, *,
                     l_max: int, tile_n: int = None,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """Bin-masked GLS race statistics (the Wyner–Ziv compression op).
 
     log_s/log_q: (B, K, N) f32; bins: (B, N) i32 with values in
@@ -258,6 +306,11 @@ def gls_binned_race(log_s: jax.Array, log_q: jax.Array, bins: jax.Array, *,
     break toward the lower atom index, matching ``jnp.argmin``, so the
     kernel stays bit-interchangeable with ``gls_binned_race_ref``.
 
+    ``interpret=None`` autodetects per ``resolve_race_mode`` — compiled
+    Pallas on TPU/GPU, the bit-identical ``gls_binned_race_ref``
+    elsewhere (callers that need the sequenced CPU shape instead make
+    that structure decision themselves; see ``wz_round_batch``).
+
     Tiling contract (DESIGN.md §10.4): the atom axis is tiled like
     ``gls_row_race`` — lane-aligned vocab-fitted tiles no larger than
     ``tile_n`` (None = the ``DEFAULT_TILE_N`` default), so importance
@@ -268,9 +321,13 @@ def gls_binned_race(log_s: jax.Array, log_q: jax.Array, bins: jax.Array, *,
     accumulator is (ROW_BLOCK, K, l_max) VMEM scratch and the per-bin
     select loop unrolls at trace time.
     """
+    mode = resolve_race_mode(interpret)
+    if mode == "fallback":
+        return gls_binned_race_ref(log_s, log_q, bins, l_max=l_max)
     b, k, n = log_s.shape
     tile_n, rb, b_pad = _row_race_tiling(
-        b, k, n, DEFAULT_TILE_N if tile_n is None else tile_n)
+        b, k, n, DEFAULT_TILE_N if tile_n is None else tile_n,
+        vmem_mult=l_max)
     pad_n = _round_up(n, tile_n) - n
     if pad_n or b_pad > b:
         log_s = jnp.pad(log_s, ((0, b_pad - b), (0, 0), (0, pad_n)),
@@ -303,7 +360,7 @@ def gls_binned_race(log_s: jax.Array, log_q: jax.Array, bins: jax.Array, *,
             pltpu.VMEM((rb, k, l_max), jnp.float32),  # running bin minima
             pltpu.VMEM((rb, k, l_max), jnp.int32),    # running bin argmins
         ],
-        interpret=interpret,
+        interpret=(mode == "interpret"),
     )(log_s, log_q, bins)
     return bmin[:b], barg[:b]
 
@@ -311,12 +368,17 @@ def gls_binned_race(log_s: jax.Array, log_q: jax.Array, bins: jax.Array, *,
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
 def gls_race(log_s: jax.Array, log_p: jax.Array, log_q: jax.Array,
              active: jax.Array, *, tile_n: int = DEFAULT_TILE_N,
-             interpret: bool = True):
+             interpret: bool | None = None):
     """log_s/log_p/log_q: (B, K, N) f32; active: (B, K) bool.
 
-    Returns (x (B, K) i32, y (B,) i32).  ``interpret=True`` runs the
-    kernel body on CPU (this container); on TPU pass interpret=False.
+    Returns (x (B, K) i32, y (B,) i32).  ``interpret=None`` autodetects
+    per ``resolve_race_mode``: compiled Pallas on TPU/GPU, the
+    bit-identical ``gls_race_ref`` elsewhere; ``True`` forces the
+    interpreter (kernel body on any backend).
     """
+    mode = resolve_race_mode(interpret)
+    if mode == "fallback":
+        return gls_race_ref(log_s, log_p, log_q, active)
     b, k, n = log_s.shape
     if n % tile_n:
         pad = tile_n - n % tile_n
@@ -355,6 +417,6 @@ def gls_race(log_s: jax.Array, log_p: jax.Array, log_q: jax.Array,
             pltpu.VMEM((1, 1), jnp.float32),    # running target min
             pltpu.VMEM((1, 1), jnp.int32),      # running target argmin
         ],
-        interpret=interpret,
+        interpret=(mode == "interpret"),
     )(log_s, log_p, log_q, active_f)
     return x, y[:, 0]

@@ -5,8 +5,16 @@ bumps its counter while its body is being traced into a program, so the
 count equals the number of race dispatches EMBEDDED in each compiled
 program (a program traced once and executed many times performs exactly
 that many kernel dispatches per execution).  tests/test_compression.py
-uses it to pin the Wyner–Ziv pipeline to ONE ``gls_binned_race``
-dispatch per batch.
+uses it to pin the Wyner–Ziv pipeline's dispatch structure, and
+benchmarks/bench_serving_backends.py records per-strategy counts so
+dispatch-count artifacts (the gls-vs-spectr K=2 gap) are visible in the
+bench JSON instead of inferred.
+
+Counter keys name the REQUESTED route ("..._pallas" vs "..._xla"): the
+kernel layer may still resolve a pallas-route call to its bit-identical
+jnp reference where the backend lacks Pallas support (``interpret=None``
+autodetection, DESIGN.md §11) — execution mode is ``resolve_race_mode``'s
+business, dispatch accounting is about program structure.
 """
 
 from __future__ import annotations
@@ -19,12 +27,24 @@ from repro.kernels.gls_race.kernel import (
     gls_binned_race,
     gls_race,
     gls_row_race,
+    has_compiled_pallas,
+    resolve_race_mode,
 )
 from repro.kernels.gls_race.ref import (
     gls_binned_race_ref,
     gls_race_ref,
     gls_row_race_ref,
 )
+
+__all__ = [
+    "dispatch_counts",
+    "reset_dispatch_counts",
+    "gls_race_op",
+    "gls_row_race_op",
+    "gls_binned_race_op",
+    "has_compiled_pallas",
+    "resolve_race_mode",
+]
 
 dispatch_counts: collections.Counter = collections.Counter()
 
@@ -34,21 +54,24 @@ def reset_dispatch_counts() -> None:
 
 
 def gls_race_op(log_s, log_p, log_q, active, *, use_kernel: bool = True,
-                interpret: bool = True):
+                interpret: bool | None = None):
+    dispatch_counts["race_" + ("pallas" if use_kernel else "xla")] += 1
     if use_kernel:
         return gls_race(log_s, log_p, log_q, active, interpret=interpret)
     return jax.jit(gls_race_ref)(log_s, log_p, log_q, active)
 
 
 def gls_row_race_op(log_s, log_q, *, use_kernel: bool = True,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
+    dispatch_counts["row_race_" + ("pallas" if use_kernel else "xla")] += 1
     if use_kernel:
         return gls_row_race(log_s, log_q, interpret=interpret)
     return jax.jit(gls_row_race_ref)(log_s, log_q)
 
 
 def gls_binned_race_op(log_s, log_q, bins, *, l_max: int,
-                       use_kernel: bool = True, interpret: bool = True,
+                       use_kernel: bool = True,
+                       interpret: bool | None = None,
                        tile_n: int = None):
     """Bin-masked race statistics; ``use_kernel`` routes to the Pallas
     kernel, else the jnp oracle (bit-identical outputs either way).

@@ -1,0 +1,32 @@
+"""Shared execution-mode resolution for the Pallas kernel families.
+
+Every kernel entry point takes ``interpret: bool | None`` (DESIGN.md
+§11).  ``None`` autodetects: compiled Pallas where the backend lowers it
+(TPU/GPU), the kernel's bit-for-bit-documented jnp reference elsewhere
+(CPU) — so callers never hard-code the execution mode.  ``True`` forces
+the Pallas interpreter (the kernel BODY runs on any backend — what the
+kernel-vs-ref tests exercise); ``False`` forces compiled lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# Backends with a Pallas compilation path; everywhere else
+# ``interpret=None`` engages the jnp fallback.
+_COMPILED_BACKENDS = ("tpu", "gpu")
+
+
+def has_compiled_pallas() -> bool:
+    """True where ``pallas_call`` has a real lowering (TPU/GPU)."""
+    return jax.default_backend() in _COMPILED_BACKENDS
+
+
+def resolve_pallas_mode(interpret: bool | None = None) -> str:
+    """Resolve the tri-state ``interpret`` flag to an execution mode:
+    "compiled" | "interpret" | "fallback" (see module doc).  Exposed so
+    layered callers (the WZ pipeline, benches) can make structure
+    decisions from the same resolution the kernels use."""
+    if interpret is None:
+        return "compiled" if has_compiled_pallas() else "fallback"
+    return "interpret" if interpret else "compiled"

@@ -26,6 +26,14 @@ Lifecycle contract (DESIGN.md §7):
     the time axis) when a larger request is admitted; buffer length only
     ever grows, mirroring the scheduler's monotone buffer policy.
 
+int8 arenas (DESIGN.md §11): ``quant=True`` stores each arena as four
+leaves — int8 ``k``/``v`` plus f32 per-KV-vector scales ``k_s``/``v_s``
+with a trailing singleton axis, so every arena op here (row gather /
+scatter on axis 1, time growth on axis 3) applies uniformly to all
+leaves.  The slots model calls quantize on write and dequantize inside
+the attention reads; ``write_prefill`` quantizes dense prefill caches on
+install.
+
 Positions live in TWO places (DESIGN.md §8): the host mirror
 (``pool.pos``) is authoritative for admission/allocation and sizing
 decisions, and a lazily materialized device copy (``pos_device()``)
@@ -73,7 +81,7 @@ class CachePool:
     """Multi-model slot arena; see module docstring for the contract."""
 
     def __init__(self, cfgs: Dict[str, ModelConfig], num_slots: int,
-                 rows_per_slot: int, buf_len: int):
+                 rows_per_slot: int, buf_len: int, quant: bool = False):
         assert num_slots >= 1 and rows_per_slot >= 1
         for cfg in cfgs.values():
             assert not cfg.sliding_window, \
@@ -82,6 +90,7 @@ class CachePool:
         self.num_slots = num_slots
         self.rows_per_slot = rows_per_slot
         self.buf_len = buf_len
+        self.quant = quant
         self.caches = {name: self._init_arena(cfg, buf_len)
                        for name, cfg in self.cfgs.items()}
         # Host-side per-slot decode position (== tokens whose KV is live).
@@ -93,7 +102,15 @@ class CachePool:
 
     def _init_arena(self, cfg: ModelConfig, buf_len: int) -> dict:
         c = init_cache(cfg, self.num_slots * self.rows_per_slot, buf_len)
-        return {"k": c["k"], "v": c["v"]}   # positions live host-side
+        arena = {"k": c["k"], "v": c["v"]}   # positions live host-side
+        if self.quant:
+            # int8 leaves + per-KV-vector f32 scales (trailing-1 axis).
+            sshape = c["k"].shape[:-1] + (1,)
+            arena = {"k": jnp.zeros(c["k"].shape, jnp.int8),
+                     "v": jnp.zeros(c["v"].shape, jnp.int8),
+                     "k_s": jnp.zeros(sshape, jnp.float32),
+                     "v_s": jnp.zeros(sshape, jnp.float32)}
+        return arena
 
     # -- slot lifecycle ----------------------------------------------------
     @property
@@ -136,7 +153,7 @@ class CachePool:
             fresh = self._init_arena(cfg, buf_len)
             old = self.caches[name]
             self.caches[name] = {kk: _grow_time(fresh[kk], old[kk])
-                                 for kk in ("k", "v")}
+                                 for kk in fresh}
         self.buf_len = buf_len
 
     # -- cache content ops -------------------------------------------------
@@ -145,19 +162,25 @@ class CachePool:
         """Install a freshly prefilled ``(layers, rows_per_slot, ...)``
         cache into ``slot``'s rows of arena ``name``; ``pos`` is the
         number of prefilled tokens.  The prefill cache must have been
-        built at the pool's current ``buf_len``."""
+        built at the pool's current ``buf_len``.  Quant pools accept a
+        dense {k, v} prefill cache and quantize it on install."""
         arena = self.caches[name]
         assert cache["k"].shape[3] == self.buf_len, \
             "prefill cache buffer != pool buffer"
+        if self.quant and "k_s" not in cache:
+            from repro.serving.quant import quantize_kv
+            kq, ks = quantize_kv(cache["k"])
+            vq, vs = quantize_kv(cache["v"])
+            cache = {"k": kq, "v": vq, "k_s": ks, "v_s": vs}
         r0 = slot * self.rows_per_slot
         self.caches[name] = {kk: _scatter_rows(arena[kk], cache[kk], r0=r0)
-                             for kk in ("k", "v")}
+                             for kk in arena}
         self.pos[slot] = pos
         self._touch_pos(slot)
 
     def update(self, name: str, cache: dict) -> None:
         """Adopt the arena returned by a slots model call."""
-        self.caches[name] = {"k": cache["k"], "v": cache["v"]}
+        self.caches[name] = {kk: cache[kk] for kk in self.caches[name]}
 
     def rollback_rows(self, row_src: np.ndarray) -> None:
         """Arena-wide row replication: row i of every cache becomes row
@@ -168,7 +191,7 @@ class CachePool:
         idx = jnp.asarray(row_src, jnp.int32)
         for name, arena in self.caches.items():
             self.caches[name] = {kk: _gather_rows(arena[kk], idx)
-                                 for kk in ("k", "v")}
+                                 for kk in arena}
 
     # -- fused-round device state (DESIGN.md §8) ---------------------------
     def _touch_pos(self, slot: int) -> None:
@@ -200,7 +223,7 @@ class CachePool:
         for the advanced slots until ``refresh_pos_host``."""
         assert set(caches) == set(self.caches)
         for name, c in caches.items():
-            self.caches[name] = {"k": c["k"], "v": c["v"]}
+            self.caches[name] = {kk: c[kk] for kk in self.caches[name]}
         self._pos_dev = pos_dev
 
     def refresh_pos_host(self, pos_host: np.ndarray, slots) -> None:

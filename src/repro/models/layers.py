@@ -27,6 +27,17 @@ def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
     return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
 
 
+def dense(x: jax.Array, w) -> jax.Array:
+    """Matmul that dispatches on the weight leaf: plain arrays use ``@``;
+    ``{"q", "s"}`` dicts (``serving.quant.quantize_params``) route through
+    the W8A8 ``qdot`` — so every layer below serves both f32 and int8
+    param trees from one code path."""
+    if isinstance(w, dict):
+        from repro.serving.quant import qdot
+        return qdot(x, w)
+    return x @ w
+
+
 def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
     return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
 
@@ -106,8 +117,10 @@ def attention(
     window: int = 0,             # sliding window (0 = unbounded)
     kv_len: Optional[jax.Array] = None,  # valid KV prefix length (decode);
                                          # scalar or per-row (B,)
+    k_scale: Optional[jax.Array] = None,  # (B, Hkv, T, 1) int8-KV dequant
+    v_scale: Optional[jax.Array] = None,  # scales, both or neither
     use_kernel: bool = False,    # route the decode case through Pallas
-    interpret: bool = True,      # kernel interpret mode (CPU containers)
+    interpret: Optional[bool] = None,  # tri-state (see resolve_pallas_mode)
 ) -> jax.Array:
     """GQA attention without materializing repeated KV heads.
 
@@ -129,13 +142,17 @@ def attention(
     Both are online-softmax streams over KV tiles, numerically
     equivalent to the dense path but not bit-equal (different reduction
     order), so they stay opt-in where bit-identity contracts apply.
+
+    int8 KV arenas pass ``k_scale``/``v_scale`` (DESIGN.md §11): kernel
+    routes dequantize in-kernel tile by tile; the dense path dequantizes
+    up front.
     """
     b, h, s, d = q.shape
     if (use_kernel and s == 1 and not causal and not window
             and kv_len is not None):
         from repro.kernels.decode_attention.ops import decode_attention_op
         kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
-        out = decode_attention_op(q[:, :, 0], k, v, kvl,
+        out = decode_attention_op(q[:, :, 0], k, v, kvl, k_scale, v_scale,
                                   interpret=interpret)
         return out[:, :, None, :]
     if use_kernel and s > 1 and causal and not window:
@@ -144,8 +161,12 @@ def attention(
                               (b,))
         kvl = (None if kv_len is None else jnp.broadcast_to(
             jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,)))
-        return flash_attention_op(q, k, v, qo, kvl, causal=True,
-                                  interpret=interpret)
+        return flash_attention_op(q, k, v, qo, kvl, k_scale, v_scale,
+                                  causal=True, interpret=interpret)
+    out_dtype = q.dtype
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale
+        v = v.astype(jnp.float32) * v_scale
     hkv = k.shape[1]
     g = h // hkv
     q = q.reshape(b, hkv, g, s, d)
@@ -172,7 +193,10 @@ def attention(
     # causal q_offset>=0 but can for padded decode batches).
     w = jnp.where(jnp.isnan(w), 0.0, w)
     out = _gqa_values(w, v)
-    return out.reshape(b, h, s, d)
+    out = out.reshape(b, h, s, d)
+    # Dequantized KV runs the value matmul in f32; land back on the
+    # activation dtype (bit-identical no-op on the unquantized path).
+    return out.astype(out_dtype) if k_scale is not None else out
 
 
 def chunked_attention(
@@ -258,8 +282,8 @@ def swiglu_params(key, d_model: int, d_ff: int, dtype) -> dict:
 
 
 def swiglu(params: dict, x: jax.Array) -> jax.Array:
-    gate = jax.nn.silu(x @ params["w_gate"])
-    return (gate * (x @ params["w_up"])) @ params["w_down"]
+    gate = jax.nn.silu(dense(x, params["w_gate"]))
+    return dense(gate * dense(x, params["w_up"]), params["w_down"])
 
 
 def gelu_mlp_params(key, d_model: int, d_ff: int, dtype) -> dict:
@@ -296,12 +320,13 @@ def attn_params(key, d_model: int, num_heads: int, kv_heads: int,
 def project_qkv(params: dict, x: jax.Array, num_heads: int, kv_heads: int,
                 head_dim: int):
     b, s, _ = x.shape
-    q = (x @ params["wq"]).reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
-    k = (x @ params["wk"]).reshape(b, s, kv_heads, head_dim).transpose(0, 2, 1, 3)
-    v = (x @ params["wv"]).reshape(b, s, kv_heads, head_dim).transpose(0, 2, 1, 3)
+    q = dense(x, params["wq"]).reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = dense(x, params["wk"]).reshape(b, s, kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = dense(x, params["wv"]).reshape(b, s, kv_heads, head_dim).transpose(0, 2, 1, 3)
     return q, k, v
 
 
 def project_out(params: dict, attn_out: jax.Array) -> jax.Array:
     b, h, s, d = attn_out.shape
-    return attn_out.transpose(0, 2, 1, 3).reshape(b, s, h * d) @ params["wo"]
+    return dense(attn_out.transpose(0, 2, 1, 3).reshape(b, s, h * d),
+                 params["wo"])

@@ -102,7 +102,7 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if return_hidden:
         return x
-    return x @ params["lm_head"]
+    return L.dense(x, params["lm_head"])
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +162,7 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
     (x, _), new_cache = scan_blocks(params["layers"], (x, positions), fn,
                                     cache=layer_cache)
     x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
-    logits = (x @ params["lm_head"])[:, 0]
+    logits = L.dense(x, params["lm_head"])[:, 0]
     return logits, {"k": new_cache["k"], "v": new_cache["v"],
                     "pos": jnp.asarray(s, jnp.int32)}
 
@@ -199,8 +199,21 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict):
     (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
                                     cache=layer_cache)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = (x @ params["lm_head"])[:, 0]
+    logits = L.dense(x, params["lm_head"])[:, 0]
     return logits, {"k": new_cache["k"], "v": new_cache["v"], "pos": pos + 1}
+
+
+def _maybe_quantize_kv(cache_l, k, v):
+    """Quantize-on-write hook for int8 KV arenas (DESIGN.md §11): when the
+    layer cache carries scale leaves (``k_s``/``v_s``), the freshly
+    projected k/v quantize per KV vector and the caller writes int8 plus
+    scales; otherwise k/v pass through and scales are None."""
+    if "k_s" not in cache_l:
+        return k, v, None, None
+    from repro.serving.quant import quantize_kv
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    return kq, vq, ks, vs
 
 
 def _rowwise_cache_write(cache_k, cache_v, k, v, starts):
@@ -232,7 +245,8 @@ def _rowwise_cache_write_masked(cache_k, cache_v, k, v, starts, write):
 
 
 def _block_prefill_slots(params_l, carry, cache_l, cfg: ModelConfig,
-                         write, use_kernel: bool, interpret: bool):
+                         write, use_kernel: bool,
+                         interpret: Optional[bool]):
     """Prompt-chunk prefill with per-row start positions, straight into a
     cache arena (the batched admission step, DESIGN.md §9).  Identical
     attention structure to ``_block_verify_slots`` — causal over the
@@ -249,21 +263,29 @@ def _block_prefill_slots(params_l, carry, cache_l, cfg: ModelConfig,
     positions = pos[:, None, None] + jnp.arange(m, dtype=jnp.int32)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
+    k, v, ks, vs = _maybe_quantize_kv(cache_l, k, v)
     new_k, new_v = _rowwise_cache_write_masked(cache_l["k"], cache_l["v"],
                                                k, v, pos, write)
+    new_cache = {"k": new_k, "v": new_v}
+    k_scale = v_scale = None
+    if ks is not None:
+        k_scale, v_scale = _rowwise_cache_write_masked(
+            cache_l["k_s"], cache_l["v_s"], ks, vs, pos, write)
+        new_cache.update(k_s=k_scale, v_s=v_scale)
     out = L.attention(q, new_k, new_v, causal=True, q_offset=pos,
-                      kv_len=pos + m, use_kernel=use_kernel,
-                      interpret=interpret)
+                      kv_len=pos + m, k_scale=k_scale, v_scale=v_scale,
+                      use_kernel=use_kernel, interpret=interpret)
     x = x + L.project_out(p, out)
     x = x + L.swiglu(params_l["mlp"],
                      L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
-    return (x, pos), {"k": new_k, "v": new_v}
+    return (x, pos), new_cache
 
 
 def prefill_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
                   cache: dict, pos: jax.Array,
                   write: Optional[jax.Array] = None, *,
-                  use_kernel: bool = False, interpret: bool = True) -> dict:
+                  use_kernel: bool = False,
+                  interpret: Optional[bool] = None) -> dict:
     """Device-side admission prefill: tokens (B, m) prompt chunks land
     directly in their arena rows at per-row offsets ``pos`` (B,) —
     no temporary cache, no host scatter (DESIGN.md §9).  Returns the new
@@ -284,14 +306,15 @@ def prefill_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
         write = jnp.ones((tokens.shape[0],), bool)
     fn = functools.partial(_block_prefill_slots, cfg=cfg, write=write,
                            use_kernel=use_kernel, interpret=interpret)
-    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    layer_cache = {kk: cache[kk] for kk in cache if kk != "pos"}
     (_, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
                                     cache=layer_cache)
-    return {"k": new_cache["k"], "v": new_cache["v"]}
+    return dict(new_cache)
 
 
 def _block_decode_slots(params_l, carry, cache_l, cfg: ModelConfig,
-                        use_kernel: bool = False, interpret: bool = True):
+                        use_kernel: bool = False,
+                        interpret: Optional[bool] = None):
     """Single-token decode where every batch row sits at its own position
     (cache-arena serving: rows = slots x drafts, DESIGN.md §7)."""
     x, pos = carry  # x: (B, 1, D); pos: (B,) per-row current position
@@ -305,20 +328,29 @@ def _block_decode_slots(params_l, carry, cache_l, cfg: ModelConfig,
     q = L.apply_rope(q, posb, cfg.rope_theta)
     k = L.apply_rope(k, posb, cfg.rope_theta)
     t_cache = cache_l["k"].shape[2]
+    k, v, ks, vs = _maybe_quantize_kv(cache_l, k, v)
     new_k, new_v = _rowwise_cache_write(cache_l["k"], cache_l["v"], k, v,
                                         pos % t_cache)
+    new_cache = {"k": new_k, "v": new_v}
+    k_scale = v_scale = None
+    if ks is not None:
+        k_scale, v_scale = _rowwise_cache_write(
+            cache_l["k_s"], cache_l["v_s"], ks, vs, pos % t_cache)
+        new_cache.update(k_s=k_scale, v_s=v_scale)
     kv_len = jnp.minimum(pos + 1, t_cache)
     out = L.attention(q, new_k, new_v, causal=False, kv_len=kv_len,
+                      k_scale=k_scale, v_scale=v_scale,
                       use_kernel=use_kernel, interpret=interpret)
     x = x + L.project_out(p, out)
     x = x + L.swiglu(params_l["mlp"],
                      L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
-    return (x, pos), {"k": new_k, "v": new_v}
+    return (x, pos), new_cache
 
 
 def decode_step_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
                       cache: dict, pos: jax.Array, *,
-                      use_kernel: bool = False, interpret: bool = True):
+                      use_kernel: bool = False,
+                      interpret: Optional[bool] = None):
     """Per-row-position decode: tokens (B, 1), pos (B,) -> (logits
     (B, Vpad), new {k, v} cache).  Position tracking lives with the
     caller (host-side in the cache pool), not in the cache dict.
@@ -327,12 +359,12 @@ def decode_step_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
     x = params["embed"][tokens]
     fn = functools.partial(_block_decode_slots, cfg=cfg,
                            use_kernel=use_kernel, interpret=interpret)
-    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    layer_cache = {kk: cache[kk] for kk in cache if kk != "pos"}
     (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
                                     cache=layer_cache)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = (x @ params["lm_head"])[:, 0]
-    return logits, {"k": new_cache["k"], "v": new_cache["v"]}
+    logits = L.dense(x, params["lm_head"])[:, 0]
+    return logits, dict(new_cache)
 
 
 def _block_verify(params_l, carry, cache_l, cfg: ModelConfig):
@@ -373,7 +405,7 @@ def verify_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
                                     cache=layer_cache)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = x @ params["lm_head"]
+    logits = L.dense(x, params["lm_head"])
     return logits, {"k": new_cache["k"], "v": new_cache["v"],
                     "pos": pos + tokens.shape[1]}
 
@@ -391,14 +423,21 @@ def _block_verify_slots(params_l, carry, cache_l, cfg: ModelConfig):
     positions = pos[:, None, None] + jnp.arange(m, dtype=jnp.int32)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
+    k, v, ks, vs = _maybe_quantize_kv(cache_l, k, v)
     new_k, new_v = _rowwise_cache_write(cache_l["k"], cache_l["v"], k, v,
                                         pos)
+    new_cache = {"k": new_k, "v": new_v}
+    k_scale = v_scale = None
+    if ks is not None:
+        k_scale, v_scale = _rowwise_cache_write(
+            cache_l["k_s"], cache_l["v_s"], ks, vs, pos)
+        new_cache.update(k_s=k_scale, v_s=v_scale)
     out = L.attention(q, new_k, new_v, causal=True, q_offset=pos,
-                      kv_len=pos + m)
+                      kv_len=pos + m, k_scale=k_scale, v_scale=v_scale)
     x = x + L.project_out(p, out)
     x = x + L.swiglu(params_l["mlp"],
                      L.rmsnorm(params_l["mlp_norm"], x, cfg.norm_eps))
-    return (x, pos), {"k": new_k, "v": new_v}
+    return (x, pos), new_cache
 
 
 def verify_step_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
@@ -410,9 +449,9 @@ def verify_step_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
     assert not cfg.sliding_window, "verify_step_slots: non-ring caches only"
     x = params["embed"][tokens]
     fn = functools.partial(_block_verify_slots, cfg=cfg)
-    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    layer_cache = {kk: cache[kk] for kk in cache if kk != "pos"}
     (x, _), new_cache = scan_blocks(params["layers"], (x, pos), fn,
                                     cache=layer_cache)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = x @ params["lm_head"]
-    return logits, {"k": new_cache["k"], "v": new_cache["v"]}
+    logits = L.dense(x, params["lm_head"])
+    return logits, dict(new_cache)

@@ -7,8 +7,16 @@ dynamically quantized per token (max-abs / 127) so the matmuls run
 s8 x s8 -> s32 and rescale in f32 — the standard W8A8 recipe, and the
 form XLA lowers to native int8 MXU ops on TPU.
 
-Only the big matmuls quantize (attn projections, SwiGLU, LM head); norms,
-embeddings and the KV cache stay bf16.
+Only the big matmuls quantize (attn projections, SwiGLU, LM head); norms
+and embeddings stay bf16.  The KV cache quantizes separately — per-KV-
+vector int8 arenas via ``quantize_kv`` (DESIGN.md §11), dequantized
+inside the attention kernels.
+
+Backend note: ``qdot`` only emits a native s8 x s8 -> s32 ``dot_general``
+where the hardware has int8 MXU/tensor-core paths (TPU/GPU).  XLA:CPU
+lowers that op 5-8x SLOWER than an f32 GEMM, so on CPU the integer
+matmul is emulated in f32 — exact while the contraction depth K keeps
+``K * 127^2 < 2^24`` (K <= 1040), which covers every model in this repo.
 """
 
 from __future__ import annotations
@@ -56,17 +64,47 @@ def quantize_params(params: dict) -> dict:
 
 
 def qdot(x: jax.Array, wq: dict) -> jax.Array:
-    """W8A8 matmul: x (..., in) bf16 x int8 (in, out) -> (..., out) bf16."""
+    """W8A8 matmul: x (..., in) bf16 x int8 (in, out) -> (..., out) bf16.
+
+    Emits native int8 ``dot_general`` on TPU/GPU; on CPU the same
+    integer product runs as an f32 GEMM (see module doc) — identical
+    results up to the f32-exact contraction bound."""
     x32 = x.astype(jnp.float32)
     sx = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0
     sx = jnp.maximum(sx, 1e-8)
-    xq = jnp.clip(jnp.round(x32 / sx), -127, 127).astype(jnp.int8)
-    acc = jax.lax.dot_general(
-        xq, wq["q"],
-        dimension_numbers=(((xq.ndim - 1,), (wq["q"].ndim - 2,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    out = acc.astype(jnp.float32) * sx * wq["s"]
+    xq = jnp.clip(jnp.round(x32 / sx), -127, 127)
+    if jax.default_backend() in ("tpu", "gpu"):
+        acc = jax.lax.dot_general(
+            xq.astype(jnp.int8), wq["q"],
+            dimension_numbers=(((xq.ndim - 1,), (wq["q"].ndim - 2,)),
+                               ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+    else:
+        # xq already holds exact integers in f32; both operands are
+        # <= 127 in magnitude so the products and partial sums stay
+        # integer-exact in the f32 accumulator for K <= 1040.
+        acc = xq @ wq["q"].astype(jnp.float32)
+    out = acc * sx * wq["s"]
     return out.astype(x.dtype)
+
+
+def quantize_kv(x: jax.Array):
+    """Per-KV-vector symmetric int8 over the trailing (head_dim) axis.
+
+    x: (..., D) -> (int8 (..., D), f32 scale (..., 1)).  The trailing-1
+    scale keeps every cache-arena axis op (row gather/scatter on axis 1,
+    time growth on axis 3) shape-compatible with the int8 leaf."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``quantize_kv``: int8 (..., D) * f32 (..., 1) -> dtype."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
 def _is_q(w) -> bool:

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.gls_race.kernel import gls_row_race
+from repro.kernels.gls_race.ops import gls_row_race_op
 from repro.specdec import verify as V
 
 _TINY = 1e-30
@@ -78,21 +78,23 @@ class HostBlockResult(NamedTuple):
 
 
 def _race_row_stats(log_u: jax.Array, q_steps: jax.Array, backend: str,
-                    interpret: bool):
+                    interpret: bool | None):
     """Row statistics of the block race table.
 
     log_u/q_steps: (L+1, K, N).  Returns (rmin, rarg), each (L+1, K):
     the minimum race time ``log(-log U) - log q`` over the vocab and its
     argmin, per (step, draft) row.  The xla and pallas paths compute the
     same score floats (same masking convention), so their outputs are
-    bit-identical.
+    bit-identical — including when the pallas route autodetects the jnp
+    fallback (``interpret=None`` off-TPU, DESIGN.md §11).
     """
     log_s = jnp.log(-log_u)
     if backend == "pallas":
         log_q = jnp.where(q_steps > 0,
                           jnp.log(jnp.maximum(q_steps, _TINY)),
                           jnp.float32(-jnp.inf))
-        return gls_row_race(log_s, log_q, interpret=interpret)
+        return gls_row_race_op(log_s, log_q, use_kernel=True,
+                               interpret=interpret)
     score = log_s - jnp.log(jnp.maximum(q_steps, _TINY))
     score = jnp.where(q_steps > 0, score, jnp.inf)
     return jnp.min(score, axis=-1), jnp.argmin(score, axis=-1).astype(
@@ -205,7 +207,7 @@ def block_verify(log_u: jax.Array, draft_tokens: jax.Array,
                  draft_probs: Optional[jax.Array], q_all: jax.Array,
                  strat_keys: Optional[jax.Array], *, strategy: str = "gls",
                  backend: str = "xla",
-                 interpret: bool = True) -> BlockVerifyResult:
+                 interpret: bool | None = None) -> BlockVerifyResult:
     """One jitted call verifying a whole speculative block.
 
     log_u:        (L+1, K, N) shared log-uniforms (common random numbers).
@@ -234,7 +236,7 @@ def block_verify_batched(log_u: jax.Array, draft_tokens: jax.Array,
                          draft_probs: Optional[jax.Array], q_all: jax.Array,
                          strat_keys: jax.Array, *, strategy: str = "gls",
                          backend: str = "xla",
-                         interpret: bool = True) -> BlockVerifyResult:
+                         interpret: bool | None = None) -> BlockVerifyResult:
     """Batched Algorithm-2 verification for R requests, device-resident.
 
     The fused-round building block (DESIGN.md §8): every argument is the
@@ -345,7 +347,7 @@ def legacy_block_verify(log_u, draft_tokens, draft_probs, q_all, strat_keys,
 
 def run_block_verify(log_u, draft_tokens, draft_probs, q_all, strat_keys, *,
                      strategy: str, backend: str = "xla",
-                     interpret: bool = True) -> HostBlockResult:
+                     interpret: bool | None = None) -> HostBlockResult:
     """Backend dispatcher shared by both engines: runs the block verifier
     and unpacks to host.  The fused backends spend exactly ONE host
     transfer per block; "legacy" replays the per-token host loop."""

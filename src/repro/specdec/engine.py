@@ -59,7 +59,10 @@ class SpecDecConfig:
     top_k: int = 50               # paper uses top-K 50 sampling
     max_new_tokens: int = 64
     verifier_backend: str = "xla"  # "legacy" | "xla" | "pallas"
-    pallas_interpret: bool = True  # interpret=True runs the kernel on CPU
+    # Tri-state (DESIGN.md §11): None autodetects — compiled Pallas on
+    # TPU/GPU, the bit-identical jnp fallback elsewhere; True forces the
+    # interpreter (kernel body on any backend); False forces compiled.
+    pallas_interpret: Optional[bool] = None
     # Route the cached engine's slot-aware decode attention through the
     # kernels/decode_attention Pallas kernel.  Numerically equivalent
     # but NOT bit-equal to the dense path (online-softmax reduction
@@ -70,6 +73,12 @@ class SpecDecConfig:
     # use_kernel route of layers.attention).  Same opt-in contract as
     # decode_kernel: numerically equivalent, not bit-equal.
     prefill_kernel: bool = False
+    # Quantized serving (DESIGN.md §11): int8 KV arenas in the cached
+    # engine's pool (per-vector scales, quantize-on-write) and W8A8
+    # target matmuls in the fused-round verify.  Changes logits within
+    # quantization tolerance, so the equivalence gate is ACCEPTANCE-RATE
+    # statistics, not bit-identity (tests/test_quant_fused.py).
+    quant: bool = False
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:

@@ -185,6 +185,15 @@ class CachedSpecDecEngine:
         self.pool_slots = pool_slots
         self.pool: Optional[CachePool] = None
         self._sessions: dict = {}
+        # Quantized serving (DESIGN.md §11): W8A8 target weights are used
+        # ONLY by the verify matmuls — admission prefill keeps the f32
+        # tree (prompt KV quality sets the whole session's context) and
+        # the drafter stays f32 (it is already the small model).  The
+        # KV arenas quantize pool-wide via CachePool(quant=True).
+        self._t_verify_params = self.t_params
+        if cfg.quant:
+            from repro.serving.quant import quantize_params
+            self._t_verify_params = quantize_params(self.t_params)
         self._d_step = jax.jit(
             lambda p, t, c, pos: decode_step_slots(
                 p, self.d_cfg, t, c, pos, use_kernel=cfg.decode_kernel,
@@ -235,7 +244,8 @@ class CachedSpecDecEngine:
             self.pool = CachePool(
                 {"target": self.t_cfg, "drafter": self.d_cfg},
                 num_slots=self.pool_slots,
-                rows_per_slot=self.cfg.num_drafts, buf_len=buf_len)
+                rows_per_slot=self.cfg.num_drafts, buf_len=buf_len,
+                quant=self.cfg.quant)
         else:
             self.pool.ensure_buf(buf_len)
         return self.pool
@@ -401,7 +411,7 @@ class CachedSpecDecEngine:
                 [np.full((K, 1), sess.pending, np.int32), d_tokens[r]],
                 axis=1)
         t_logits, t_cache = self._t_verify(
-            self.t_params, jnp.asarray(chunk), pool.caches["target"],
+            self._t_verify_params, jnp.asarray(chunk), pool.caches["target"],
             jnp.asarray(row_pos0))
         self.num_target_forwards += 1
         pool.update("target", t_cache)
@@ -511,10 +521,10 @@ class CachedSpecDecEngine:
                              0).astype(jnp.int32)[:, None]
 
             def dstep(carry, inp):
-                cur, dk, dv = carry
+                cur, dc = carry
                 log_u_j, j = inp
                 logits, dc = decode_step_slots(
-                    d_params, d_cfg, cur, {"k": dk, "v": dv}, row_pos + j,
+                    d_params, d_cfg, cur, dc, row_pos + j,
                     use_kernel=cfg.decode_kernel,
                     interpret=cfg.pallas_interpret)
                 p_all = probs_from_logits(logits, cfg.temps[0], cfg.top_k,
@@ -523,12 +533,11 @@ class CachedSpecDecEngine:
                     log_u_j.reshape(rows, N), p_all)
                 tok = jnp.where(live_row, tok, 0).astype(jnp.int32)
                 ys = (tok, p_all) if need_probs else tok
-                return (tok[:, None], dc["k"], dc["v"]), ys
+                return (tok[:, None], dc), ys
 
             xs = (jnp.swapaxes(log_u[:, :L], 0, 1),
                   jnp.arange(L, dtype=jnp.int32))
-            (_, d_k, d_v), ys = jax.lax.scan(
-                dstep, (cur0, d_kv["k"], d_kv["v"]), xs)
+            (_, d_kv1), ys = jax.lax.scan(dstep, (cur0, dict(d_kv)), xs)
             toks = ys[0] if need_probs else ys            # (L, rows)
             d_tokens = toks.T.reshape(S, K, L)
             d_probs = (ys[1].reshape(L, S, K, N).transpose(1, 2, 0, 3)
@@ -558,9 +567,9 @@ class CachedSpecDecEngine:
             surv = slot_of * K + k_star[slot_of]
             row_src = jnp.where(live_row, surv, row_ids)
             t_kv2 = {kk: jnp.take(t_kv2[kk], row_src, axis=1)
-                     for kk in ("k", "v")}
-            d_kv2 = {"k": jnp.take(d_k, row_src, axis=1),
-                     "v": jnp.take(d_v, row_src, axis=1)}
+                     for kk in t_kv2}
+            d_kv2 = {kk: jnp.take(d_kv1[kk], row_src, axis=1)
+                     for kk in d_kv1}
             new_pos = jnp.where(live, pos + 1 + a, pos)
 
             # --- residual drafter catch-up ----------------------------
@@ -627,7 +636,7 @@ class CachedSpecDecEngine:
         if self._fused_round is None:
             self._fused_round = self._build_fused_round()
         t_kv, d_kv, pos_dev, packed = self._fused_round(
-            self.t_params, self.d_params,
+            self._t_verify_params, self.d_params,
             pool.caches["target"], pool.caches["drafter"],
             pool.pos_device(), jnp.asarray(pending), jnp.asarray(live),
             jnp.stack(sub_rows))

@@ -155,25 +155,39 @@ def test_pipeline_backends_bit_equal_large():
 
 
 def test_pipeline_one_kernel_dispatch_per_batch():
-    """The single-dispatch contract: tracing one pallas-backend batch
-    embeds exactly ONE ``gls_binned_race`` call in the program (the
-    trace-time counter in kernels/gls_race/ops.py), and re-running the
-    compiled program dispatches nothing new at trace level."""
+    """The single-dispatch contract, per execution mode (DESIGN.md §11):
+    a compiled/interpret pallas batch embeds exactly ONE
+    ``gls_binned_race`` call; the CPU fallback re-sequences through TWO
+    ``gls_row_race`` dispatches (encoder + bin-masked decoder) and no
+    binned dispatch.  Either way, re-running the compiled program
+    dispatches nothing new at trace level (trace-time counters in
+    kernels/gls_race/ops.py)."""
     from repro.kernels.gls_race import ops
     # Unique static/shape combo so this test owns its trace.
     b, k, n, l_max = 17, 3, 384, 5
     keys, log_w_enc, log_w_dec, bins = _random_pipeline_inputs(
         jax.random.PRNGKey(2), b, k, n, l_max)
+    fallback = ops.resolve_race_mode(None) == "fallback"
+    expect = ({"row_race_pallas": 2} if fallback
+              else {"binned_race_pallas": 1})
+    ops.reset_dispatch_counts()
+    for _ in range(2):      # second run: cached program, no new traces
+        out = wz_pipeline(keys, log_w_enc, log_w_dec, bins, l_max=l_max,
+                          backend="pallas")
+        jax.block_until_ready(out)
+        for kk, cnt in expect.items():
+            assert ops.dispatch_counts[kk] == cnt, dict(ops.dispatch_counts)
+    if fallback:
+        assert ops.dispatch_counts["binned_race_pallas"] == 0
+
+    # The kernel-structure contract stays pinned regardless of backend:
+    # interpret mode forces the single binned-race program.
     ops.reset_dispatch_counts()
     out = wz_pipeline(keys, log_w_enc, log_w_dec, bins, l_max=l_max,
-                      backend="pallas")
+                      backend="pallas", interpret=True)
     jax.block_until_ready(out)
     assert ops.dispatch_counts["binned_race_pallas"] == 1, \
         dict(ops.dispatch_counts)
-    out = wz_pipeline(keys, log_w_enc, log_w_dec, bins, l_max=l_max,
-                      backend="pallas")
-    jax.block_until_ready(out)
-    assert ops.dispatch_counts["binned_race_pallas"] == 1  # cached program
 
 
 @pytest.mark.parametrize("k,l_max", [(1, 2), (2, 2), (2, 8), (4, 8)])

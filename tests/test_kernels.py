@@ -1,5 +1,10 @@
-"""Pallas kernel validation: shape/dtype sweeps, allclose vs the pure-jnp
-oracles (interpret=True executes the kernel bodies on CPU)."""
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernel-body tests pass ``interpret=True`` explicitly — the interpreter
+executes the same kernel structure (grid, BlockSpecs, accumulator
+sweeps) that compiles on TPU/GPU, so these sweeps ARE the compiled-mode
+contract runnable on CPU.  Default-mode (``interpret=None``) tests pin
+the backend-autodetected fallback to the reference, bit for bit."""
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +39,8 @@ def test_gls_race_matches_ref(b, k, n, tile):
     log_q = jnp.log(jax.random.dirichlet(kq, jnp.ones(n), (b, k)))
     active = jax.random.bernoulli(kq, 0.7, (b, k))
     active = active.at[:, 0].set(True)  # at least one active
-    x, y = gls_race(log_s, log_p, log_q, active, tile_n=tile)
+    x, y = gls_race(log_s, log_p, log_q, active, tile_n=tile,
+                    interpret=True)
     xr, yr = gls_race_ref(log_s, log_p, log_q, active)
     np.testing.assert_array_equal(np.asarray(x), np.asarray(xr))
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
@@ -59,7 +65,7 @@ def test_gls_row_race_matches_ref(b, k, n):
     q = q.at[..., : n // 4].set(0.0)       # zero-prob symbols never win
     q = q / q.sum(-1, keepdims=True)
     log_q = jnp.where(q > 0, jnp.log(jnp.maximum(q, 1e-37)), -jnp.inf)
-    rmin, rarg = gls_row_race(log_s, log_q)
+    rmin, rarg = gls_row_race(log_s, log_q, interpret=True)
     rmin_r, rarg_r = gls_row_race_ref(log_s, log_q)
     np.testing.assert_array_equal(np.asarray(rmin), np.asarray(rmin_r))
     np.testing.assert_array_equal(np.asarray(rarg), np.asarray(rarg_r))
@@ -102,7 +108,8 @@ def test_gls_binned_race_matches_ref(b, k, n, l_max):
     log_q = jnp.where(jax.random.bernoulli(kb, 0.02, (b, k, n)), jnp.inf,
                       log_q)
     bins = jax.random.randint(kb, (b, n), 0, l_max)
-    bmin, barg = gls_binned_race(log_s, log_q, bins, l_max=l_max)
+    bmin, barg = gls_binned_race(log_s, log_q, bins, l_max=l_max,
+                                 interpret=True)
     bmin_r, barg_r = gls_binned_race_ref(log_s, log_q, bins, l_max=l_max)
     np.testing.assert_array_equal(np.asarray(bmin), np.asarray(bmin_r))
     np.testing.assert_array_equal(np.asarray(barg), np.asarray(barg_r))
@@ -140,7 +147,8 @@ def test_gls_race_zero_prob_symbols_never_win():
     p = p.at[..., :128].set(0.0)
     p = p / p.sum(-1, keepdims=True)
     log_p = jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-37)), -jnp.inf)
-    x, y = gls_race(log_s, log_p, log_p, jnp.ones((b, k), bool), tile_n=128)
+    x, y = gls_race(log_s, log_p, log_p, jnp.ones((b, k), bool), tile_n=128,
+                    interpret=True)
     assert bool(jnp.all(x >= 128)) and bool(jnp.all(y >= 128))
 
 
@@ -165,7 +173,7 @@ def test_flash_attention_matches_ref(b, h, hkv, s, t, d, causal, window,
     k = jax.random.normal(kk, (b, hkv, t, d), dtype)
     v = jax.random.normal(kv, (b, hkv, t, d), dtype)
     out = flash_attention(q, k, v, causal=causal, window=window,
-                          tq=64, tk=64)
+                          tq=64, tk=64, interpret=True)
     ref = flash_attention_ref(q, k, v, causal=causal, window=window)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -185,13 +193,14 @@ def test_flash_attention_per_row_offsets_match_ref():
     v = jax.random.normal(kv, (b, hkv, t, d), jnp.float32)
     q_off = jnp.array([0, 3, 17, 40, 72], jnp.int32)
     kv_len = q_off + s
-    out = flash_attention(q, k, v, q_off, kv_len, causal=True, tq=16, tk=32)
+    out = flash_attention(q, k, v, q_off, kv_len, causal=True, tq=16,
+                          tk=32, interpret=True)
     ref = flash_attention_ref(q, k, v, q_off, kv_len, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
     dense = L.attention(q, k, v, causal=True, q_offset=q_off, kv_len=kv_len)
     routed = L.attention(q, k, v, causal=True, q_offset=q_off,
-                         kv_len=kv_len, use_kernel=True)
+                         kv_len=kv_len, use_kernel=True, interpret=True)
     np.testing.assert_allclose(np.asarray(routed), np.asarray(dense),
                                atol=2e-5, rtol=2e-5)
 
@@ -205,7 +214,7 @@ def test_flash_attention_fully_masked_rows_emit_zeros():
     v = jax.random.normal(kv, (2, 2, 32, 16), jnp.float32)
     kv_len = jnp.array([0, 32], jnp.int32)
     out = np.asarray(flash_attention(q, k, v, None, kv_len, causal=True,
-                                     tq=8, tk=8))
+                                     tq=8, tk=8, interpret=True))
     assert np.isfinite(out).all()
     assert (out[0] == 0.0).all()
     assert (np.abs(out[1]) > 0).any()
@@ -229,7 +238,7 @@ def test_decode_attention_matches_ref(b, h, hkv, t, d, tk, dtype):
     k = jax.random.normal(kk, (b, hkv, t, d), dtype)
     v = jax.random.normal(kv, (b, hkv, t, d), dtype)
     kv_len = jax.random.randint(kl, (b,), 1, t + 1)
-    out = decode_attention(q, k, v, kv_len, tk=tk)
+    out = decode_attention(q, k, v, kv_len, tk=tk, interpret=True)
     ref = decode_attention_ref(q, k, v, kv_len)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -244,7 +253,7 @@ def test_decode_attention_single_valid_token():
     k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, t, d))
     v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, t, d))
     kv_len = jnp.asarray([1])
-    out = decode_attention(q, k, v, kv_len, tk=32)
+    out = decode_attention(q, k, v, kv_len, tk=32, interpret=True)
     # With one valid token, output == v[:, :, 0] broadcast over groups.
     np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(v[0, 0, 0]),
                                atol=1e-5)
@@ -279,7 +288,8 @@ def test_decode_step_slots_use_kernel_matches_dense_path():
     ref_logits, ref_cache = decode_step_slots(params, cfg, tokens, cache,
                                               pos)
     ker_logits, ker_cache = decode_step_slots(params, cfg, tokens, cache,
-                                              pos, use_kernel=True)
+                                              pos, use_kernel=True,
+                                              interpret=True)
     np.testing.assert_allclose(np.asarray(ker_logits),
                                np.asarray(ref_logits), atol=2e-5,
                                rtol=2e-5)
@@ -308,6 +318,60 @@ def test_model_chunked_attention_matches_kernel():
     k = jax.random.normal(kk, (b, hkv, s, d))
     v = jax.random.normal(kv, (b, hkv, s, d))
     a = chunked_attention(q, k, v, causal=True, kv_block=64)
-    bref = flash_attention(q, k, v, causal=True, tq=64, tk=64)
+    bref = flash_attention(q, k, v, causal=True, tq=64, tk=64,
+                           interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(bref),
                                atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Execution-mode resolution (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def test_default_mode_resolution_matches_backend():
+    """interpret=None compiles where Pallas lowers (TPU/GPU) and falls
+    back to the reference elsewhere; True/False force their modes."""
+    from repro.kernels.pallas_mode import has_compiled_pallas, \
+        resolve_pallas_mode
+    expected = "compiled" if has_compiled_pallas() else "fallback"
+    assert resolve_pallas_mode(None) == expected
+    assert resolve_pallas_mode(True) == "interpret"
+    assert resolve_pallas_mode(False) == "compiled"
+
+
+@pytest.mark.parametrize("b,k,n,l_max", [
+    (3, 4, 500, 4),
+    (9, 3, 2 ** 14, 4),   # the wz-pipeline shape class
+])
+def test_gls_binned_race_default_mode_bit_identical(b, k, n, l_max):
+    """Default-mode gls_binned_race must be BIT-identical to the oracle on
+    every backend: compiled lowering on TPU/GPU is exactness-tested by
+    the interpret sweep above; the CPU fallback IS the oracle."""
+    from repro.kernels.gls_race.kernel import gls_binned_race
+    from repro.kernels.gls_race.ref import gls_binned_race_ref
+    key = jax.random.PRNGKey(b * 77 + n)
+    ks, kq, kb = jax.random.split(key, 3)
+    log_s = jnp.log(jnp.maximum(jax.random.exponential(ks, (b, k, n)),
+                                1e-37))
+    log_q = jnp.where(jax.random.bernoulli(kq, 0.8, (b, k, n)),
+                      jax.random.normal(kq, (b, k, n)), -jnp.inf)
+    bins = jax.random.randint(kb, (b, n), 0, l_max)
+    bmin, barg = gls_binned_race(log_s, log_q, bins, l_max=l_max)
+    bmin_r, barg_r = gls_binned_race_ref(log_s, log_q, bins, l_max=l_max)
+    np.testing.assert_array_equal(np.asarray(bmin), np.asarray(bmin_r))
+    np.testing.assert_array_equal(np.asarray(barg), np.asarray(barg_r))
+
+
+def test_gls_row_race_default_mode_bit_identical():
+    from repro.kernels.gls_race.ref import gls_row_race_ref as row_ref
+    key = jax.random.PRNGKey(42)
+    ku, kq = jax.random.split(key)
+    b, k, n = 7, 4, 1000
+    u = jax.random.uniform(ku, (b, k, n), minval=1e-30, maxval=1.0)
+    log_s = jnp.log(-jnp.log(u))
+    log_q = jax.random.normal(kq, (b, k, n))
+    rmin, rarg = gls_row_race(log_s, log_q)
+    rmin_r, rarg_r = row_ref(log_s, log_q)
+    np.testing.assert_array_equal(np.asarray(rmin), np.asarray(rmin_r))
+    np.testing.assert_array_equal(np.asarray(rarg), np.asarray(rarg_r))
