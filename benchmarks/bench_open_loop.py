@@ -1,0 +1,287 @@
+"""Open-loop serving benchmark: tail latency under Poisson arrivals,
+FIFO on the contiguous arena vs the paged arena + v2 policy
+(DESIGN.md §12).
+
+Closed-loop benches (bench_serving_backends) measure throughput with a
+fixed live set; this bench measures what a deployment actually ships:
+requests arrive on their OWN wall-clock schedule (Poisson interarrivals,
+heavy-tailed prompt lengths, bimodal decode lengths), the server admits
+what fits, and the reported numbers are the DISTRIBUTION of
+time-to-first-token and inter-token latency — p50 and p99, not means,
+because the p99 is where head-of-line blocking lives.
+
+Two scenarios at EQUAL KV memory and EQUAL batch width:
+
+  * ``fifo_contiguous`` — the contiguous slot arena, FIFO admission: a
+    long-running request holds its slot to completion, so a short
+    request that arrives behind ~`max_batch` long ones waits for a
+    full decode before its first token.  That wait IS the p99 TTFT.
+  * ``paged_v2`` — the paged arena with a fixed page budget equal to
+    the contiguous scenario's KV footprint, policy="v2" with
+    ``preempt_tokens`` rotation: after a quantum of tokens a long
+    request SUSPENDS (its KV pages detach into a handle — resident,
+    unwritable, re-attached to a free slot on resume with zero
+    recompute) and a waiting request takes the slot.  Tail TTFT is
+    bounded by the rotation quantum instead of the longest decode, and
+    because suspension costs a host table rewrite rather than a
+    re-prefill, throughput stays within noise of FIFO.  Under page
+    pressure the v2 policy strips the worst-ranked suspended handle
+    (demoting it to an honest re-prefill eviction), so the fixed
+    budget is never oversubscribed.
+
+Outputs are bit-identical between scenarios (per-request randomness is
+(uid, blocks)-keyed and the buffer length is pinned via
+``min_buf_len``), so the comparison is pure scheduling — same tokens,
+different tail.  ``bit_identical`` rides in the payload and CI gates
+on it.  The nightly perf gates:
+
+  * ``ttft_p99_improvement >= 2`` — the headline claim.
+  * ``paging_tokens_per_s_ratio >= 0.8`` — "no tokens/s regression"
+    from the paged MECHANISM, isolated from policy: the same trace
+    drained closed-loop under FIFO on both arenas.  The paged fused
+    round runs the identical contiguous program on a persistent
+    gathered view (engine_cached §12), so this sits at parity
+    (~0.95+); the margin is CPU wall-clock noise.
+
+``rotation_tokens_per_s_ratio`` (open-loop, makespan-based) is
+REPORTED, not gated: rotating long requests under an equal-memory
+budget genuinely costs throughput — each strip demotes a suspended
+handle to a re-prefill — and on this trace the cost is ~30% for a
+3-6x tail win.  That trade is the policy's documented price, not a
+regression; deployments tune it with ``preempt_tokens``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.lm_pair import bench_prompts, get_pair
+from repro.specdec import CachedSpecDecEngine, SpecDecConfig, SpecDecServer
+
+K = 2
+L = 3
+PAGE = 8
+BATCH = 4               # both scenarios: equal compute per round
+PREEMPT_TOKENS = 32     # rotation quantum (tokens per stint)
+MEAN_GAP_S = 0.12       # Poisson interarrival mean — near saturation
+# Warm prompts: the short set exercises admission + the fused round;
+# the long set tiles every power-of-two prefill bucket up to 128 so a
+# mid-run re-prefill (a stripped suspend handle re-admitting) never
+# pays a compile on the clock.
+WARM_SHORT = (3, 5, 9, 17, 33)
+WARM_BUCKETS = (65, 129, 176)
+
+
+def _trace(n: int, max_new_short: int, max_new_long: int, seed: int = 17,
+           mean_gap_s: float = MEAN_GAP_S):
+    """Poisson arrivals, heavy-tailed (Pareto) prompt lengths, bimodal
+    decode lengths: ~3 in 10 requests decode ``max_new_long`` tokens —
+    the requests that monopolize FIFO slots and create the TTFT tail
+    this bench exists to measure."""
+    rng = np.random.default_rng(seed)
+    arrive = np.cumsum(rng.exponential(mean_gap_s, size=n))
+    lens = np.minimum(4 + (rng.pareto(2.0, size=n) * 8).astype(int), 48)
+    base = bench_prompts(n, length=int(lens.max()) + 1)
+    prompts = [p[:int(m)] for p, m in zip(base, lens)]
+    # Long/short mix is DETERMINISTIC (every 3rd request long) so the
+    # head-of-line pressure the bench measures is stationary across
+    # trace sizes — a small-sample random draw can cluster its longs
+    # where they never stack 4-deep, and then FIFO shows no tail at
+    # all and the comparison measures luck, not scheduling.
+    max_news = np.where(np.arange(n) % 3 == 0, max_new_long,
+                        max_new_short).tolist()
+    min_buf = max(len(p) for p in prompts) + max(max_news) + L + 2
+    # Cover the warm prompts too: warming must never grow the pool
+    # buffer past the pinned length (buffer LENGTH changes compiled
+    # reduction shapes, which would break paged-vs-contiguous
+    # bit-identity between scenarios).
+    min_buf = max(min_buf,
+                  max(WARM_SHORT) + max_new_long + L + 2,
+                  max(WARM_BUCKETS) + 4 + L + 2)
+    return arrive, prompts, max_news, min_buf
+
+
+def _serve_open_loop(srv, prompts, arrive, max_news, key):
+    """Drive the server against the wall-clock arrival schedule."""
+    done = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(prompts) or srv.queue or srv.live:
+        now = time.perf_counter() - t0
+        while i < len(prompts) and arrive[i] <= now:
+            srv.submit(prompts[i], max_new=max_news[i])
+            i += 1
+        if not (srv.queue or srv.live):
+            time.sleep(min(arrive[i] - now, 0.005))
+            continue
+        done.extend(srv.step(key))
+    return done
+
+
+def _latency_stats(done):
+    ttfts = np.array([r.ttft_ms for r in done])
+    itls = np.concatenate([r.itl_ms for r in done if len(r.itl_ms)] or
+                          [np.zeros(1)])
+    return {
+        "ttft_p50_ms": float(np.percentile(ttfts, 50)),
+        "ttft_p99_ms": float(np.percentile(ttfts, 99)),
+        "itl_p50_ms": float(np.percentile(itls, 50)),
+        "itl_p99_ms": float(np.percentile(itls, 99)),
+    }
+
+
+def _scenario(pair, *, paged: bool, min_buf: int):
+    """Build (engine, server factory) for one arena.  The factory takes
+    policy overrides so one warmed engine serves both the open-loop
+    policy run and the closed-loop FIFO parity run.  The paged
+    scenario's fixed page budget equals the contiguous scenario's KV
+    footprint: BATCH slots x K rows x ceil(min_buf / PAGE) pages."""
+    target, drafter = pair
+    sd = SpecDecConfig(num_drafts=K, draft_len=L, strategy="gls", top_k=50,
+                       paged=paged, page_size=PAGE)
+    if paged:
+        budget = BATCH * K * -(-min_buf // PAGE)
+        eng = CachedSpecDecEngine(target, drafter, sd,
+                                  pool_slots=BATCH, pool_pages=budget)
+    else:
+        eng = CachedSpecDecEngine(target, drafter, sd, pool_slots=BATCH)
+
+    def make(**policy_kw):
+        return SpecDecServer(eng, max_batch=BATCH, cache_mode="kv_fused",
+                             min_buf_len=min_buf, **policy_kw)
+
+    return eng, make
+
+
+def _drain_closed(make, prompts, max_news, key):
+    """Closed-loop FIFO drain of the trace (all requests queued at
+    t=0): tokens / makespan is the policy-free throughput of the
+    ARENA, the number the mechanism-parity gate compares.  Best of
+    two drains (each on a FRESH server, so uids — and with them the
+    (uid, blocks)-keyed randomness — restart identically): single
+    closed drains swing ±15% on shared-CPU wall clocks, which would
+    flake the parity gate."""
+    best, done = 0.0, None
+    for _ in range(2):
+        srv = make()
+        for p, mn in zip(prompts, max_news):
+            srv.submit(p, max_new=mn)
+        t0 = time.perf_counter()
+        done = []
+        while srv.queue or srv.live:
+            done.extend(srv.step(key))
+        makespan = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in done)
+        best = max(best, toks / makespan)
+    return done, best
+
+
+def collect(*, n_requests: int = 24, max_new_short: int = 8,
+            max_new_long: int = 128) -> dict:
+    pair = get_pair()
+    arrive, prompts, max_news, min_buf = _trace(
+        n_requests, max_new_short, max_new_long)
+    key = jax.random.PRNGKey(23)
+    payload = {"n_requests": n_requests,
+               "max_new": sorted(set(max_news)),
+               "prompt_lens": [len(p) for p in prompts]}
+    scenarios = {
+        "fifo_contiguous": (False, {}),
+        "paged_v2": (True, dict(policy="v2",
+                                preempt_tokens=PREEMPT_TOKENS)),
+    }
+    outputs = {}
+    for name, (paged, policy_kw) in scenarios.items():
+        eng, make = _scenario(pair, paged=paged, min_buf=min_buf)
+        # Warm pass, off the clock: compiles the fused round, the v2
+        # rotation machinery (suspend/resume sync on the paged
+        # engine), and — via WARM_BUCKETS — every prefill bucket a
+        # mid-run (re-)admission can hit.
+        warm = make(**policy_kw)
+        for n in WARM_SHORT:
+            warm.submit(np.arange(1, 1 + n, dtype=np.int32),
+                        max_new=max_new_long)
+        for n in WARM_BUCKETS:
+            warm.submit(np.arange(1, 1 + n, dtype=np.int32) % 31 + 1,
+                        max_new=4)
+        warm.run(key)
+        if paged:
+            # Second, short warm pass: the paged engine compiles a
+            # DIFFERENT prefill program per bucket depending on
+            # whether the fused view is live (admissions prefill into
+            # the view) or absent (admissions scatter through the page
+            # table).  Pass 1 hit some buckets pre-view (its first
+            # admission wave); rerunning the same bucket tiling with
+            # the view persisting from pass 1 compiles the view-path
+            # entries too — otherwise a mid-run admission pays a
+            # ~0.5s compile on the serving clock.
+            warm = make(**policy_kw)
+            for n in WARM_SHORT:
+                warm.submit(np.arange(1, 1 + n, dtype=np.int32),
+                            max_new=8)
+            for n in WARM_BUCKETS:
+                warm.submit(np.arange(1, 1 + n, dtype=np.int32) % 31 + 1,
+                            max_new=4)
+            warm.run(key)
+        assert eng.pool.buf_len == min_buf, \
+            "warm pass grew the pinned buffer — bit-identity would break"
+        srv = make(**policy_kw)
+        t0 = time.perf_counter()
+        done = _serve_open_loop(srv, prompts, arrive, max_news, key)
+        makespan = time.perf_counter() - t0
+        stats = _latency_stats(done)
+        toks = sum(len(r.output) for r in done)
+        stats["tokens_per_s"] = toks / makespan
+        stats["evictions"] = srv.metrics.evictions
+        stats["preemptions"] = srv.metrics.preemptions
+        stats["draft_syncs"] = srv.metrics.draft_syncs
+        payload[name] = stats
+        outputs[name] = {r.uid: list(r.output) for r in done}
+        # Mechanism parity: drain the SAME trace closed-loop under
+        # FIFO on this arena — policy out of the picture.
+        fifo_done, fifo_tps = _drain_closed(make, prompts, max_news,
+                                            key)
+        payload[name]["closed_fifo_tokens_per_s"] = fifo_tps
+        outputs[name + "/closed"] = {r.uid: list(r.output)
+                                     for r in fifo_done}
+    payload["bit_identical"] = all(
+        o == outputs["fifo_contiguous"] for o in outputs.values())
+    payload["ttft_p99_improvement"] = (
+        payload["fifo_contiguous"]["ttft_p99_ms"]
+        / max(payload["paged_v2"]["ttft_p99_ms"], 1e-9))
+    # Gated: the paged arena itself must not regress throughput.
+    payload["paging_tokens_per_s_ratio"] = (
+        payload["paged_v2"]["closed_fifo_tokens_per_s"]
+        / max(payload["fifo_contiguous"]["closed_fifo_tokens_per_s"],
+              1e-9))
+    # Reported: rotation's open-loop cost (the tail/throughput trade).
+    payload["rotation_tokens_per_s_ratio"] = (
+        payload["paged_v2"]["tokens_per_s"]
+        / max(payload["fifo_contiguous"]["tokens_per_s"], 1e-9))
+    return payload
+
+
+def run(fast: bool = False) -> dict:
+    payload = collect(n_requests=24 if fast else 48)
+    for name in ("fifo_contiguous", "paged_v2"):
+        s = payload[name]
+        emit(f"open_loop_{name}", s["ttft_p99_ms"] * 1e3,
+             f"ttft_p50={s['ttft_p50_ms']:.1f}ms "
+             f"ttft_p99={s['ttft_p99_ms']:.1f}ms "
+             f"itl_p99={s['itl_p99_ms']:.1f}ms "
+             f"tok/s={s['tokens_per_s']:.1f}")
+    emit("open_loop_summary", 0.0,
+         f"p99_ttft_improvement={payload['ttft_p99_improvement']:.2f}x "
+         f"paging_tok/s_ratio={payload['paging_tokens_per_s_ratio']:.2f} "
+         f"rotation_tok/s_ratio="
+         f"{payload['rotation_tokens_per_s_ratio']:.2f} "
+         f"bit_identical={payload['bit_identical']}")
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast=True)

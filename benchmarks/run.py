@@ -3,16 +3,20 @@ Prints ``name,us_per_call,derived`` CSV (harness contract).
 
 Set REPRO_BENCH_FAST=0 for the full (slower) configurations.
 
-``--quick`` runs the spec-dec serving benchmark, the batched Wyner–Ziv
-pipeline benchmark, and the kernel-roofline microbench, and writes their
-merged JSON payload (block efficiency + tokens/s for gls vs specinfer
-vs spectr at K in {2, 8}, verifier-backend host-sync deltas,
-batched-vs-sequential scheduler tokens/s, quant-vs-f32 serving deltas,
-per-strategy race-dispatch counts, the ``wz_pipeline`` rows — samples/s
-for loop vs xla vs pallas, xla↔pallas equality, Prop.-4 match bound —
-and the ``roofline_kernels`` rows with bytes-moved / achieved-GB/s /
-%-of-memory-peak per coupling kernel) to BENCH_specdec.json — the
-artifact CI archives so the perf trajectory is tracked per commit.
+``--quick`` runs the spec-dec serving benchmark, the open-loop
+tail-latency benchmark, the batched Wyner–Ziv pipeline benchmark, and
+the kernel-roofline microbench, and writes their merged JSON payload
+(block efficiency + tokens/s for gls vs specinfer vs spectr at K in
+{2, 8}, verifier-backend host-sync deltas, batched-vs-sequential
+scheduler tokens/s, quant-vs-f32 serving deltas, per-strategy
+race-dispatch counts, the ``open_loop`` rows — p50/p99 TTFT and ITL
+for FIFO-contiguous vs paged-v2, paged-vs-contiguous bit-identity,
+the paging/rotation tokens-per-s ratios the nightly gates read — the
+``wz_pipeline`` rows — samples/s for loop vs xla vs pallas, xla↔pallas
+equality, Prop.-4 match bound — and the ``roofline_kernels`` rows with
+bytes-moved / achieved-GB/s / %-of-memory-peak per coupling kernel) to
+BENCH_specdec.json — the artifact CI archives so the perf trajectory
+is tracked per commit.
 """
 
 from __future__ import annotations
@@ -30,11 +34,13 @@ FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
 def quick(out_path: str) -> None:
     from benchmarks import (
+        bench_open_loop,
         bench_roofline,
         bench_serving_backends,
         bench_wz_pipeline,
     )
     payload = bench_serving_backends.run(fast=True)
+    payload["open_loop"] = bench_open_loop.run(fast=True)
     payload["wz_pipeline"] = bench_wz_pipeline.run(fast=True)
     payload["roofline_kernels"] = bench_roofline.run(fast=True)["kernels"]
     with open(out_path, "w") as f:
@@ -56,6 +62,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_ablation_draft_len,
+        bench_open_loop,
         bench_fig2_gaussian,
         bench_fig4_mnist,
         bench_fig6_toy_acceptance,
@@ -73,6 +80,7 @@ def main() -> None:
         ("fig2", bench_fig2_gaussian),
         ("fig4", bench_fig4_mnist),
         ("wz_pipeline", bench_wz_pipeline),
+        ("open_loop", bench_open_loop),
         ("ablation_L", bench_ablation_draft_len),
         ("roofline", bench_roofline),
     ]

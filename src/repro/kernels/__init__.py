@@ -13,10 +13,19 @@ forces compiled, failing loudly on unsupported backends.  Callers
 should leave the default alone.
 """
 
-from repro.kernels.decode_attention.ops import decode_attention_op
-from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.decode_attention.ops import (
+    decode_attention_op,
+    decode_attention_paged_op,
+)
+from repro.kernels.flash_attention.ops import (
+    flash_attention_op,
+    flash_attention_paged_op,
+)
 from repro.kernels.gls_race.ops import gls_race_op, gls_row_race_op
+from repro.kernels.paged import gather_kv_pages
 from repro.kernels.ssd_chunk.ops import ssd_chunk_op, ssd_chunked_kernel
 
-__all__ = ["decode_attention_op", "flash_attention_op", "gls_race_op",
-           "gls_row_race_op", "ssd_chunk_op", "ssd_chunked_kernel"]
+__all__ = ["decode_attention_op", "decode_attention_paged_op",
+           "flash_attention_op", "flash_attention_paged_op",
+           "gather_kv_pages", "gls_race_op", "gls_row_race_op",
+           "ssd_chunk_op", "ssd_chunked_kernel"]

@@ -19,3 +19,27 @@ def decode_attention_op(q, k, v, kv_len, k_scale=None, v_scale=None, *,
         return decode_attention(q, k, v, kv_len, k_scale, v_scale,
                                 interpret=interpret)
     return jax.jit(decode_attention_ref)(q, k, v, kv_len, k_scale, v_scale)
+
+
+def decode_attention_paged_op(q, k_pages, v_pages, table, kv_len,
+                              k_scale_pages=None, v_scale_pages=None, *,
+                              buf_len: int, use_kernel: bool = True,
+                              interpret: bool | None = None):
+    """Decode attention over a paged KV pool (DESIGN.md §12).
+
+    ``k_pages``/``v_pages``: (P, Hkv, page, D) physical pools;
+    ``table``: (B, n_lp) int32 page table (0 = unmapped);
+    ``buf_len``: static contiguous view length.  The page table is
+    resolved by a reference gather into a (B, Hkv, buf_len, D) view and
+    the math is the contiguous op's, bit-identically — a TPU kernel
+    would instead resolve the table in the BlockSpec index map
+    (``kernels.paged`` docstring)."""
+    from repro.kernels.paged import gather_kv_pages
+    k = gather_kv_pages(k_pages, table, buf_len)
+    v = gather_kv_pages(v_pages, table, buf_len)
+    ks = vs = None
+    if k_scale_pages is not None:
+        ks = gather_kv_pages(k_scale_pages, table, buf_len)
+        vs = gather_kv_pages(v_scale_pages, table, buf_len)
+    return decode_attention_op(q, k, v, kv_len, ks, vs,
+                               use_kernel=use_kernel, interpret=interpret)

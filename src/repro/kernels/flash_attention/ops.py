@@ -24,3 +24,30 @@ def flash_attention_op(q, k, v, q_offset=None, kv_len=None, k_scale=None,
                                interpret=interpret)
     fn = functools.partial(flash_attention_ref, causal=causal, window=window)
     return jax.jit(fn)(q, k, v, q_offset, kv_len, k_scale, v_scale)
+
+
+def flash_attention_paged_op(q, k_pages, v_pages, table, q_offset=None,
+                             kv_len=None, k_scale_pages=None,
+                             v_scale_pages=None, *, buf_len: int,
+                             causal=True, window=0,
+                             use_kernel: bool = True,
+                             interpret: bool | None = None):
+    """Flash attention over a paged KV pool (DESIGN.md §12).
+
+    ``k_pages``/``v_pages``: (P, Hkv, page, D) physical pools;
+    ``table``: (B, n_lp) int32 page table (0 = unmapped);
+    ``buf_len``: static contiguous view length.  The page table is
+    resolved by a reference gather into a (B, Hkv, buf_len, D) view and
+    the math is the contiguous op's, bit-identically — a TPU kernel
+    would instead resolve the table in the BlockSpec index map
+    (``kernels.paged`` docstring)."""
+    from repro.kernels.paged import gather_kv_pages
+    k = gather_kv_pages(k_pages, table, buf_len)
+    v = gather_kv_pages(v_pages, table, buf_len)
+    ks = vs = None
+    if k_scale_pages is not None:
+        ks = gather_kv_pages(k_scale_pages, table, buf_len)
+        vs = gather_kv_pages(v_scale_pages, table, buf_len)
+    return flash_attention_op(q, k, v, q_offset, kv_len, ks, vs,
+                              causal=causal, window=window,
+                              use_kernel=use_kernel, interpret=interpret)

@@ -1,0 +1,44 @@
+"""Kernel-level paged-KV layout and the gather that resolves it.
+
+DESIGN.md §12: the paged arena stores each (slot-row, layer) KV stream
+as a chain of fixed-size time pages in a physical pool
+``(P, Hkv, page, D)``; a device-resident page table ``(B, n_lp)`` int32
+maps each batch row's logical page ``j`` to a physical page index.
+Physical page 0 is a permanent all-zero page and table entry 0 means
+"unmapped" — both resolve to zeros under the gather, and zeros beyond
+``kv_len`` are masked to exact ``-inf`` by every attention op, so an
+unmapped tail is token-invisible.
+
+``gather_kv_pages`` is the REFERENCE resolution of that indirection:
+one ``jnp.take`` over the page axis materializes a contiguous
+``(B, Hkv, T, D)`` view, which then feeds the existing flash/decode
+attention entry points unchanged — paged attention is bit-identical to
+contiguous attention by construction, because it runs the identical
+math on an identical view.  On TPU the gather never needs to
+materialize: a Pallas kernel resolves the page table inside the
+BlockSpec index map (each grid step's KV tile address comes from
+``table[b, j]`` instead of ``j``), streaming pages HBM→VMEM directly.
+That fused variant is a follow-on; this module pins its semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_kv_pages(pages: jax.Array, table: jax.Array,
+                    t: int) -> jax.Array:
+    """Resolve a page table into a contiguous KV view.
+
+    pages: (P, Hkv, page, D) physical page pool (page 0 all-zero);
+    table: (B, n_lp) int32 logical->physical map (0 = unmapped);
+    t:     static view length, t <= n_lp * page.
+    Returns (B, Hkv, t, D) in the pool's dtype.
+    """
+    b, n_lp = table.shape
+    _, hkv, page, d = pages.shape
+    v = jnp.take(pages, table.reshape(-1), axis=0)      # (B*n_lp, Hkv, pg, D)
+    v = v.reshape(b, n_lp, hkv, page, d)
+    v = jnp.swapaxes(v, 1, 2).reshape(b, hkv, n_lp * page, d)
+    return v[:, :, :t]

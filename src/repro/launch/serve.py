@@ -10,7 +10,10 @@ target forward per round); ``--cache-mode kv`` serves from persistent
 KV caches in a multi-request slot pool (DESIGN.md §7) — same tokens,
 no re-prefill; ``--cache-mode kv_fused`` additionally runs each whole
 round as ONE jitted device program (DESIGN.md §8) — same tokens again,
-zero draft syncs, one host sync per round.
+zero draft syncs, one host sync per round.  ``--paged`` swaps the slot
+arena for the paged KV arena and ``--policy v2 --preempt-tokens N``
+turns on eviction/re-admission + rotation preemption (DESIGN.md §12)
+— same tokens in every combination.
 
 Loads checkpoints if given, otherwise trains a small pair on the
 synthetic corpus first (CPU-scale demonstration of the full path)."""
@@ -57,6 +60,20 @@ def main():
                          "the running round under kv_fused (DESIGN.md "
                          "§9); per_request: the 2-dispatches-per-request "
                          "reference path")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV arena (DESIGN.md §12): fixed-size "
+                         "time pages behind a device page table — the "
+                         "queue can oversubscribe physical capacity "
+                         "and preemption parks pages instead of "
+                         "discarding KV (kv/kv_fused only)")
+    ap.add_argument("--policy", default="fifo", choices=("fifo", "v2"),
+                    help="v2: priority-ordered admission with "
+                         "eviction/re-admission and preemption "
+                         "(kv/kv_fused only)")
+    ap.add_argument("--preempt-tokens", type=int, default=None,
+                    help="per-request rotation quantum: suspend a "
+                         "request after this many new tokens when "
+                         "others are waiting (policy v2)")
     ap.add_argument("--prefill-kernel", action="store_true",
                     help="route admission prefill chunks through the "
                          "flash-attention Pallas kernel (numerically "
@@ -65,6 +82,9 @@ def main():
     if args.cache_mode == "kv_fused" and args.backend == "legacy":
         ap.error("--cache-mode kv_fused needs a device verifier backend "
                  "(xla or pallas)")
+    if (args.paged or args.policy == "v2") and \
+            args.cache_mode not in ("kv", "kv_fused"):
+        ap.error("--paged / --policy v2 need --cache-mode kv or kv_fused")
 
     import sys, os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__),
@@ -83,7 +103,8 @@ def main():
                         strategy=args.strategy, top_k=50,
                         max_new_tokens=args.max_new,
                         verifier_backend=args.backend,
-                        prefill_kernel=args.prefill_kernel)
+                        prefill_kernel=args.prefill_kernel,
+                        paged=args.paged)
     if args.cache_mode in ("kv", "kv_fused"):
         eng = CachedSpecDecEngine(target, drafter, cfg,
                                   pool_slots=args.max_batch)
@@ -92,7 +113,9 @@ def main():
     server = SpecDecServer(eng, max_batch=args.max_batch,
                            batched=args.batched,
                            cache_mode=args.cache_mode,
-                           admission=args.admission)
+                           admission=args.admission,
+                           policy=args.policy,
+                           preempt_tokens=args.preempt_tokens)
     for p in bench_prompts(args.requests):
         server.submit(p, max_new=args.max_new)
     done = server.run(jax.random.PRNGKey(0))
@@ -107,6 +130,7 @@ def main():
           f"mean-ttft={ttft:.1f}ms prefill-dispatches={pd} "
           f"rounds={m.rounds} target-forwards={m.target_forwards} "
           f"verify-syncs={m.host_syncs} draft-syncs={m.draft_syncs} "
+          f"evictions={m.evictions} preemptions={m.preemptions} "
           f"over {len(done)} requests")
 
 

@@ -1,6 +1,7 @@
 """Model substrate: six architecture families behind one API."""
 
-from repro.models.cache_pool import CachePool
+from repro.models.cache_pool import CachePool, PagedCachePool, \
+    PagePoolExhausted
 from repro.models.config import ModelConfig
 from repro.models.registry import (
     decode_step,
@@ -14,17 +15,25 @@ from repro.models.registry import (
 
 from repro.models.transformer import (
     decode_step_slots,
+    decode_step_slots_paged,
     prefill_slots,
+    prefill_slots_paged,
     verify_step_slots,
+    verify_step_slots_paged,
 )
 
 __all__ = [
     "CachePool",
+    "PagedCachePool",
+    "PagePoolExhausted",
     "ModelConfig",
     "decode_step",
     "decode_step_slots",
+    "decode_step_slots_paged",
     "prefill_slots",
+    "prefill_slots_paged",
     "verify_step_slots",
+    "verify_step_slots_paged",
     "family_module",
     "forward",
     "init_cache",

@@ -50,12 +50,14 @@ views never drift.
 from __future__ import annotations
 
 import functools
-from typing import Dict
+import heapq
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import paged as P
 from repro.models.config import ModelConfig
 from repro.models.registry import init_cache
 
@@ -226,6 +228,14 @@ class CachePool:
             self.caches[name] = {kk: c[kk] for kk in self.caches[name]}
         self._pos_dev = pos_dev
 
+    def adopt_pos_device(self, pos_dev: jax.Array) -> None:
+        """Adopt ONLY a fused round's advanced device positions.  Used
+        when the round's KV lives in a caller-held contiguous view
+        rather than in pool storage (the paged kv_fused path, §12):
+        positions still flow through the pool's device mirror, storage
+        syncs separately at view-commit events."""
+        self._pos_dev = pos_dev
+
     def refresh_pos_host(self, pos_host: np.ndarray, slots) -> None:
         """Refresh the host position mirror for ``slots`` from a fused
         round's packed result.  Only the slots the round advanced are
@@ -242,3 +252,284 @@ class CachePool:
         for s in self._free:
             per_slot[s] = default
         return np.repeat(per_slot, self.rows_per_slot).astype(np.int32)
+
+
+@jax.jit
+def _grow_pages_leaf(new_leaf, old_leaf):
+    return jax.lax.dynamic_update_slice_in_dim(new_leaf, old_leaf, 0, axis=1)
+
+
+class PagePoolExhausted(RuntimeError):
+    """A fixed-budget paged pool ran out of physical pages.  The
+    scheduler's v2 policy treats this as its eviction signal boundary —
+    it reserves conservatively ahead of every round, so hitting this
+    means the caller's accounting is wrong, not that eviction is due."""
+
+
+class PagedCachePool(CachePool):
+    """Paged slot arena (DESIGN.md §12): same lifecycle contract and
+    model-facing semantics as ``CachePool``, but each model's KV lives
+    in fixed-size physical pages ``(layers, num_pages + 1, kv_heads,
+    page_size, head_dim)`` behind ONE page table ``(rows, n_lp)`` shared
+    by every model (positions are shared, so all models' chains advance
+    in lockstep; physical page index ``p`` names page ``p`` in every
+    model's storage at once).  Physical page 0 is a permanent zero page
+    and table entry 0 means unmapped — see models/paged.py for the
+    gather/scatter semantics that make dead rows and reused (garbage)
+    pages token-invisible.
+
+    Differences from the contiguous pool:
+
+      * ``ensure_buf`` is a table WIDENING (append unmapped columns) —
+        no storage copy, no whole-pool zero-pad regrowth;
+      * storage is reserved per slot as its chain grows (``reserve``;
+        ``write_prefill`` reserves for the prompt, engines reserve
+        ``pos + L + 1`` before each round), so a free slot holds zero
+        pages and a fixed ``num_pages`` budget can oversubscribe slots
+        (more queued requests than physical capacity) — exhausting a
+        fixed budget raises ``PagePoolExhausted``; with ``num_pages=
+        None`` the pool starts at full contiguous-equivalent capacity
+        and doubles on demand;
+      * model calls run the ``*_slots_paged`` entry points (pages +
+        device table) instead of taking ``pool.caches`` — this class
+        deliberately does NOT define ``caches``, so contiguous-only
+        code paths fail loudly;
+      * rollback replicates chain CONTENT page-by-page through the
+        table (``models/paged.replicate_rows``) — rows keep their own
+        physical pages.
+    """
+
+    def __init__(self, cfgs: Dict[str, ModelConfig], num_slots: int,
+                 rows_per_slot: int, buf_len: int, quant: bool = False,
+                 page_size: int = 64, num_pages: Optional[int] = None):
+        assert num_slots >= 1 and rows_per_slot >= 1 and page_size >= 1
+        for cfg in cfgs.values():
+            assert not cfg.sliding_window, \
+                "PagedCachePool: non-ring (full-attention) caches only"
+        self.cfgs = dict(cfgs)
+        self.num_slots = num_slots
+        self.rows_per_slot = rows_per_slot
+        self.buf_len = buf_len
+        self.quant = quant
+        self.page_size = page_size
+        self.n_lp = P.n_logical_pages(buf_len, page_size)
+        rows = num_slots * rows_per_slot
+        self.fixed_budget = num_pages is not None
+        self.num_pages = num_pages if self.fixed_budget \
+            else rows * self.n_lp
+        assert self.num_pages >= 1
+        self.pages = {name: self._init_pages(cfg, self.num_pages)
+                      for name, cfg in self.cfgs.items()}
+        # Shared page table: host-authoritative, device mirror lazy
+        # (same two-view discipline as positions, DESIGN.md §8).
+        self.page_table = np.zeros((rows, self.n_lp), np.int32)
+        self._pt_dev = None
+        self._free_pages = list(range(1, self.num_pages + 1))
+        heapq.heapify(self._free_pages)       # lowest-free-page first
+        self._chain_len = np.zeros(num_slots, np.int64)
+        self.pos = np.zeros(num_slots, np.int64)
+        self._pos_dev = None
+        self._free = list(range(num_slots))
+
+    def _init_pages(self, cfg: ModelConfig, num_pages: int) -> dict:
+        c = init_cache(cfg, 1, self.page_size)
+        shape = (c["k"].shape[0], num_pages + 1) + c["k"].shape[2:]
+        pages = {"k": jnp.zeros(shape, c["k"].dtype),
+                 "v": jnp.zeros(shape, c["v"].dtype)}
+        if self.quant:
+            sshape = shape[:-1] + (1,)
+            pages = {"k": jnp.zeros(shape, jnp.int8),
+                     "v": jnp.zeros(shape, jnp.int8),
+                     "k_s": jnp.zeros(sshape, jnp.float32),
+                     "v_s": jnp.zeros(sshape, jnp.float32)}
+        return pages
+
+    # -- page allocation ---------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    def chain_pages(self, n_tokens: int) -> int:
+        """Pages ONE row needs to cover ``n_tokens`` positions."""
+        return P.n_logical_pages(max(int(n_tokens), 0), self.page_size)
+
+    def held_pages(self, slot: int) -> int:
+        """Physical pages currently owned by ``slot`` (all its rows)."""
+        return int(self._chain_len[slot]) * self.rows_per_slot
+
+    def reserve(self, slot: int, n_tokens: int) -> None:
+        """Extend ``slot``'s chains (every row in lockstep) to cover
+        ``n_tokens`` logical positions.  Never shrinks.  Raises
+        ``PagePoolExhausted`` on a fixed budget (before mutating
+        anything); auto-grow pools double their storage instead."""
+        need_lp = self.chain_pages(n_tokens)
+        assert need_lp <= self.n_lp, (
+            f"reserve({n_tokens}) needs {need_lp} logical pages but the "
+            f"table holds {self.n_lp}; grow buf_len first (ensure_buf)")
+        have = int(self._chain_len[slot])
+        if need_lp <= have:
+            return
+        want = (need_lp - have) * self.rows_per_slot
+        if want > len(self._free_pages):
+            if self.fixed_budget:
+                raise PagePoolExhausted(
+                    f"slot {slot} needs {want} pages, "
+                    f"{len(self._free_pages)}/{self.num_pages} free")
+            self._grow_pages(want - len(self._free_pages))
+        r0 = slot * self.rows_per_slot
+        for lp in range(have, need_lp):
+            for r in range(r0, r0 + self.rows_per_slot):
+                self.page_table[r, lp] = heapq.heappop(self._free_pages)
+        self._chain_len[slot] = need_lp
+        self._touch_table(slot)
+
+    def _grow_pages(self, min_extra: int) -> None:
+        """Auto-grow storage: at least double (amortized O(1) copies),
+        at least ``min_extra`` new pages.  Page indices are stable, so
+        the table is untouched."""
+        new_total = max(self.num_pages * 2, self.num_pages + min_extra)
+        for name, cfg in self.cfgs.items():
+            fresh = self._init_pages(cfg, new_total)
+            old = self.pages[name]
+            self.pages[name] = {kk: _grow_pages_leaf(fresh[kk], old[kk])
+                                for kk in fresh}
+        self._free_pages.extend(range(self.num_pages + 1, new_total + 1))
+        heapq.heapify(self._free_pages)
+        self.num_pages = new_total
+
+    def release(self, slot: int) -> None:
+        """Free the slot AND its pages.  Clearing the slot's table rows
+        is what keeps its dead rows harmless: their in-round garbage
+        writes redirect through unmapped entries and DROP, so a freed
+        page reallocated to another request can never be corrupted by
+        the releasing slot riding along in a later round."""
+        r0 = slot * self.rows_per_slot
+        r1 = r0 + self.rows_per_slot
+        for pg in self.page_table[r0:r1].reshape(-1):
+            if pg > 0:
+                heapq.heappush(self._free_pages, int(pg))
+        self.page_table[r0:r1] = 0
+        self._chain_len[slot] = 0
+        self._touch_table(slot)
+        super().release(slot)
+
+    # -- suspend / resume (DESIGN.md §12): pages without a slot ------------
+    def detach(self, slot: int) -> dict:
+        """Suspend a slot's request: free the SLOT but keep its PAGES.
+        Returns a handle owning the chains; ``attach`` later re-binds
+        them to any free slot — a host table rewrite, no KV copy and no
+        recompute — and ``release_handle`` forfeits them.  Detached
+        pages are in neither the free heap (no other slot can claim
+        them) nor the table (no round can write them): the bytes the
+        handle owns are exactly the bytes the request left behind."""
+        r0 = slot * self.rows_per_slot
+        r1 = r0 + self.rows_per_slot
+        handle = {"chains": self.page_table[r0:r1].copy(),
+                  "chain_len": int(self._chain_len[slot]),
+                  "pos": int(self.pos[slot])}
+        self.page_table[r0:r1] = 0
+        self._chain_len[slot] = 0
+        self._touch_table(slot)
+        super().release(slot)
+        return handle
+
+    def attach(self, slot: int, handle: dict) -> None:
+        """Re-bind a detached handle's chains to ``slot``.  The table
+        may have WIDENED since detach (``ensure_buf``); the extra
+        columns stay unmapped, same as any short chain."""
+        r0 = slot * self.rows_per_slot
+        r1 = r0 + self.rows_per_slot
+        chains = handle["chains"]
+        assert chains.shape[0] == self.rows_per_slot
+        assert chains.shape[1] <= self.n_lp
+        assert not self.page_table[r0:r1].any()
+        self.page_table[r0:r1, :chains.shape[1]] = chains
+        self._chain_len[slot] = int(handle["chain_len"])
+        self._touch_table(slot)
+        self.set_pos(slot, int(handle["pos"]))
+
+    def release_handle(self, handle: dict) -> None:
+        """Forfeit a suspended request's pages (demotion to a hard
+        eviction — re-admission goes back through re-prefill)."""
+        for pg in handle["chains"].reshape(-1):
+            if pg > 0:
+                heapq.heappush(self._free_pages, int(pg))
+        handle["chains"] = np.zeros_like(handle["chains"])
+        handle["chain_len"] = 0
+
+    # -- device table mirror -----------------------------------------------
+    def _touch_table(self, slot: int) -> None:
+        """Per-slot device-table update after a host-side chain change
+        (reserve/release) — one row-range write, not a full re-upload."""
+        if self._pt_dev is not None:
+            r0 = slot * self.rows_per_slot
+            r1 = r0 + self.rows_per_slot
+            self._pt_dev = self._pt_dev.at[r0:r1].set(
+                jnp.asarray(self.page_table[r0:r1]))
+
+    def pt_device(self) -> jax.Array:
+        """(rows, n_lp) i32 device page table for the paged model calls;
+        lazily materialized from the host mirror, then maintained by
+        per-slot touches."""
+        if self._pt_dev is None:
+            self._pt_dev = jnp.asarray(self.page_table)
+        return self._pt_dev
+
+    # -- buffer growth: table widening, NOT a storage copy -----------------
+    def ensure_buf(self, buf_len: int) -> None:
+        if buf_len <= self.buf_len:
+            return
+        new_lp = P.n_logical_pages(buf_len, self.page_size)
+        if new_lp > self.n_lp:
+            rows = self.num_slots * self.rows_per_slot
+            pad = np.zeros((rows, new_lp - self.n_lp), np.int32)
+            self.page_table = np.concatenate([self.page_table, pad], axis=1)
+            self.n_lp = new_lp
+            self._pt_dev = None        # shape changed; re-upload lazily
+        self.buf_len = buf_len
+
+    # -- cache content ops -------------------------------------------------
+    def write_prefill(self, name: str, slot: int, cache: dict,
+                      pos: int) -> None:
+        assert cache["k"].shape[3] == self.buf_len, \
+            "prefill cache buffer != pool buffer"
+        if self.quant and "k_s" not in cache:
+            from repro.serving.quant import quantize_kv
+            kq, ks = quantize_kv(cache["k"])
+            vq, vs = quantize_kv(cache["v"])
+            cache = {"k": kq, "v": vq, "k_s": ks, "v_s": vs}
+        self.reserve(slot, pos)
+        r0 = slot * self.rows_per_slot
+        tbl = jnp.asarray(self.page_table[r0:r0 + self.rows_per_slot])
+        self.pages[name] = P.scatter_arena_jit(
+            self.pages[name], tbl, {kk: cache[kk] for kk in self.pages[name]})
+        self.pos[slot] = pos
+        self._touch_pos(slot)
+
+    def update(self, name: str, pages: dict) -> None:
+        """Adopt the pages returned by a ``*_slots_paged`` model call."""
+        self.pages[name] = {kk: pages[kk] for kk in self.pages[name]}
+
+    def rollback_rows(self, row_src: np.ndarray) -> None:
+        assert row_src.shape == (self.num_slots * self.rows_per_slot,)
+        idx = jnp.asarray(row_src, jnp.int32)
+        pt = self.pt_device()
+        for name in self.pages:
+            self.pages[name] = P.replicate_rows_jit(
+                self.pages[name], pt, idx)
+
+    def adopt_round_device(self, pages: Dict[str, dict],
+                           pos_dev: jax.Array) -> None:
+        """Adopt a paged fused round's DEVICE outputs (per-model page
+        storage + advanced positions); same host-async contract as the
+        contiguous pool's ``adopt_round_device``."""
+        assert set(pages) == set(self.pages)
+        for name, pg in pages.items():
+            self.pages[name] = {kk: pg[kk] for kk in self.pages[name]}
+        self._pos_dev = pos_dev
+
+    def materialize(self, name: str) -> dict:
+        """Gather one model's full contiguous arena view (tests and
+        debugging only — the serving paths never materialize this)."""
+        return P.gather_arena_jit(self.pages[name], self.pt_device(),
+                                  buf_len=self.buf_len)

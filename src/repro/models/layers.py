@@ -199,6 +199,43 @@ def attention(
     return out.astype(out_dtype) if k_scale is not None else out
 
 
+def gqa_attention_paged(
+    q: jax.Array,                # (B, H, S, D)
+    k_pages: jax.Array,          # (P, Hkv, page, D) physical page pool
+    v_pages: jax.Array,
+    table: jax.Array,            # (B, n_lp) int32 page table, 0 = unmapped
+    *,
+    buf_len: int,                # static contiguous view length
+    causal: bool = True,
+    q_offset=0,
+    kv_len=None,
+    window: int = 0,
+    k_scale_pages: Optional[jax.Array] = None,
+    v_scale_pages: Optional[jax.Array] = None,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``gqa_attention`` over a paged KV pool (DESIGN.md §12).
+
+    Resolves the page table with the reference gather
+    (``kernels.paged.gather_kv_pages``) into a contiguous
+    ``(B, Hkv, buf_len, D)`` view and runs the identical attention math
+    — bit-identical to contiguous by construction.  Unmapped table
+    entries resolve to the zero page; zeros beyond ``kv_len`` are
+    masked to exact ``-inf``, so an unmapped tail never contributes."""
+    from repro.kernels.paged import gather_kv_pages
+    k = gather_kv_pages(k_pages, table, buf_len)
+    v = gather_kv_pages(v_pages, table, buf_len)
+    ks = vs = None
+    if k_scale_pages is not None:
+        ks = gather_kv_pages(k_scale_pages, table, buf_len)
+        vs = gather_kv_pages(v_scale_pages, table, buf_len)
+    return gqa_attention(q, k, v, causal=causal, q_offset=q_offset,
+                         kv_len=kv_len, window=window, k_scale=ks,
+                         v_scale=vs, use_kernel=use_kernel,
+                         interpret=interpret)
+
+
 def chunked_attention(
     q: jax.Array,                # (B, H, S, D)
     k: jax.Array,                # (B, Hkv, T, D)

@@ -1,0 +1,159 @@
+"""Paged KV storage: page-table indirection between the slot-arena view
+the models compute on and fixed-size physical pages on device.
+
+The contiguous pool (``cache_pool.CachePool``) stores each model's KV as
+one ``(layers, rows, kv_heads, buf_len, head_dim)`` arena; a longer
+request forces ``ensure_buf`` to zero-pad-regrow the WHOLE arena and a
+free slot still owns ``buf_len`` tokens of storage.  The paged pool
+replaces the time axis with chains of fixed-size *pages*:
+
+  physical storage  (layers, num_pages + 1, kv_heads, page_size, head_dim)
+  page table        (rows, n_logical_pages) int32
+
+Row ``b``'s logical KV positions ``[lp * page_size, (lp+1) * page_size)``
+live in physical page ``table[b, lp]``.  Entry 0 is UNMAPPED; physical
+page 0 is a permanent all-zero page, so a gather through an unmapped
+entry reads zeros and a scatter to an unmapped entry is redirected out
+of bounds and dropped (``mode="drop"``) — the zero page is never
+written.  Growing ``buf_len`` is now a table-widening (append unmapped
+columns), not a storage copy, and an oversubscribed scheduler can hold
+more slots than physical pages as long as the *live* chains fit.
+
+Bit-identity contract (the gate for the whole refactor): a gathered view
+is sliced to exactly ``buf_len`` positions, so every model computation
+runs at the same reduction shapes as the contiguous arena.  Where a
+chain is mapped, view content equals arena content; where it is not,
+the view reads the zero page — both are beyond the row's ``kv_len`` and
+masked to exact ``-inf`` scores (probability exactly 0), so the
+difference is token-invisible (the same dead-row argument DESIGN.md §7
+makes for the contiguous pool).
+
+All helpers take either a per-layer leaf ``(P+1, H, page, d)`` (used
+inside ``scan_blocks`` so only ONE layer's contiguous view is ever
+materialized) or, via the ``*_arena`` wrappers, a stacked
+``(layers, P+1, H, page, d)`` leaf.  Quant pools (DESIGN.md §11) page
+their int8 ``k``/``v`` and f32 ``k_s``/``v_s`` scale leaves through the
+same functions — only the trailing dim differs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def n_logical_pages(buf_len: int, page_size: int) -> int:
+    """Pages needed to cover ``buf_len`` tokens (ceil division)."""
+    return -(-buf_len // page_size)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer primitives (the scan_blocks building blocks)
+# ---------------------------------------------------------------------------
+
+
+def gather_layer(pages_l: jax.Array, table: jax.Array,
+                 buf_len: int) -> jax.Array:
+    """Materialize one layer's contiguous ``(rows, H, buf_len, d)`` view
+    from ``pages_l (P+1, H, page, d)`` through ``table (rows, n_lp)``.
+    Unmapped entries read physical page 0 (the zero page)."""
+    rows, n_lp = table.shape
+    _, h, page, d = pages_l.shape
+    v = jnp.take(pages_l, table.reshape(-1), axis=0)
+    v = v.reshape(rows, n_lp, h, page, d)
+    v = jnp.swapaxes(v, 1, 2).reshape(rows, h, n_lp * page, d)
+    return v[:, :, :buf_len]
+
+
+def scatter_layer(pages_l: jax.Array, table: jax.Array,
+                  view_l: jax.Array) -> jax.Array:
+    """Write a contiguous ``(rows, H, T, d)`` view back through the page
+    table.  ``T <= n_lp * page``; the pad tail and every position whose
+    table entry is unmapped redirect out of bounds and DROP, so the zero
+    page and pages owned by other rows are bit-untouched.  Mapped
+    physical pages appear in exactly one table entry (allocator
+    invariant), so the scatter has no write conflicts."""
+    rows, n_lp = table.shape
+    p1, h, page, d = pages_l.shape
+    t = view_l.shape[2]
+    if t < n_lp * page:
+        view_l = jnp.pad(
+            view_l, ((0, 0), (0, 0), (0, n_lp * page - t), (0, 0)))
+    v = view_l.reshape(rows, h, n_lp, page, d)
+    v = jnp.swapaxes(v, 1, 2).reshape(rows * n_lp, h, page, d)
+    idx = table.reshape(-1)
+    idx = jnp.where(idx > 0, idx, p1)        # unmapped -> OOB -> dropped
+    return pages_l.at[idx].set(v, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Arena-level wrappers (stacked-layer leaves, pool-side use)
+# ---------------------------------------------------------------------------
+
+
+def gather_arena(pages: dict, table: jax.Array, buf_len: int) -> dict:
+    """{leaf: (layers, P+1, H, page, d)} -> {leaf: (layers, rows, H,
+    buf_len, d)} contiguous arena (all layers; tests / host-driven
+    inspection — the model paths gather per layer inside the scan)."""
+    return {kk: jax.vmap(lambda p: gather_layer(p, table, buf_len))(leaf)
+            for kk, leaf in pages.items()}
+
+
+def scatter_arena(pages: dict, table: jax.Array, arena: dict) -> dict:
+    """Inverse of ``gather_arena`` for the leaves present in ``arena``."""
+    out = dict(pages)
+    for kk in arena:
+        out[kk] = jax.vmap(
+            lambda p, v: scatter_layer(p, table, v))(pages[kk], arena[kk])
+    return out
+
+
+def replicate_rows(pages: dict, table: jax.Array,
+                   row_src: jax.Array) -> dict:
+    """Paged analogue of the arena-wide rollback gather (DESIGN.md §7):
+    row ``i``'s chain CONTENT becomes row ``row_src[i]``'s, copied page
+    by page through the table — chains keep their own physical pages
+    (rows diverge again next round), only the bytes are replicated.
+    Rows of one slot always hold equal-length chains (reservation is
+    slot-wide), so source and destination entries are mapped in
+    lockstep; unmapped destinations drop."""
+    rows, n_lp = table.shape
+    src_idx = jnp.take(table, row_src, axis=0).reshape(-1)
+    dst = table.reshape(-1)
+
+    def one(leaf):
+        p1 = leaf.shape[0]
+        vals = jnp.take(leaf, src_idx, axis=0)
+        safe = jnp.where(dst > 0, dst, p1)   # unmapped -> OOB -> dropped
+        return leaf.at[safe].set(vals, mode="drop")
+
+    return {kk: jax.vmap(one)(leaf) for kk, leaf in pages.items()}
+
+
+# Jitted pool-side entry points (static buf_len keeps the view slice a
+# compile-time shape; jax.jit caches per (shapes, buf_len)).
+gather_arena_jit = jax.jit(gather_arena, static_argnames=("buf_len",))
+scatter_arena_jit = jax.jit(scatter_arena)
+replicate_rows_jit = jax.jit(replicate_rows)
+
+
+def paged_block(block_fn, table: jax.Array, buf_len: int):
+    """Adapt a per-layer block function (``fn(params_l, carry, cache_l)
+    -> (carry, new_cache_l)`` over a contiguous layer cache) to paged
+    storage: gather the layer view, run the block unchanged, scatter the
+    updated leaves back through the table.  This is what keeps paged
+    attention bit-identical to the contiguous path — the block itself
+    never sees a page."""
+
+    def wrapped(params_l, carry, pages_l):
+        view = {kk: gather_layer(pages_l[kk], table, buf_len)
+                for kk in pages_l}
+        carry2, new_view = block_fn(params_l, carry, view)
+        new_pages = dict(pages_l)
+        for kk in new_view:
+            new_pages[kk] = scatter_layer(pages_l[kk], table, new_view[kk])
+        return carry2, new_pages
+
+    return wrapped

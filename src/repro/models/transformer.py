@@ -455,3 +455,77 @@ def verify_step_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.dense(x, params["lm_head"])
     return logits, dict(new_cache)
+
+
+# ---------------------------------------------------------------------------
+# Paged-arena serving paths (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# Same slot-aware serving steps, but the KV lives in fixed-size pages
+# behind a per-row page table (models/paged.py) instead of one
+# contiguous arena.  Each wrapper scans the SAME per-layer block
+# function as its contiguous twin through ``paged.paged_block``: the
+# layer's contiguous view is gathered from its pages, the block runs
+# unchanged (identical reduction shapes — ``buf_len`` is the compiled
+# view length), and the updated leaves scatter back through the table.
+# Only one layer's view is ever materialized, and the attention math is
+# bit-identical to the contiguous arena by construction.
+
+
+def prefill_slots_paged(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                        pages: dict, table: jax.Array, pos: jax.Array,
+                        write: Optional[jax.Array] = None, *,
+                        buf_len: int, use_kernel: bool = False,
+                        interpret: Optional[bool] = None) -> dict:
+    """``prefill_slots`` against paged storage: pages {leaf: (layers,
+    P+1, H, page, d)}, table (rows, n_lp) -> new pages.  The caller must
+    have reserved pages covering ``pos + m`` tokens for written rows;
+    masked rows' writes drop through their unmapped entries."""
+    from repro.models import paged
+    assert not cfg.sliding_window, "prefill_slots_paged: non-ring only"
+    x = params["embed"][tokens]
+    if write is None:
+        write = jnp.ones((tokens.shape[0],), bool)
+    inner = functools.partial(_block_prefill_slots, cfg=cfg, write=write,
+                              use_kernel=use_kernel, interpret=interpret)
+    fn = paged.paged_block(inner, table, buf_len)
+    (_, _), new_pages = scan_blocks(params["layers"], (x, pos), fn,
+                                    cache=dict(pages))
+    return dict(new_pages)
+
+
+def decode_step_slots_paged(params: dict, cfg: ModelConfig,
+                            tokens: jax.Array, pages: dict,
+                            table: jax.Array, pos: jax.Array, *,
+                            buf_len: int, use_kernel: bool = False,
+                            interpret: Optional[bool] = None):
+    """``decode_step_slots`` against paged storage -> (logits (B, Vpad),
+    new pages)."""
+    from repro.models import paged
+    x = params["embed"][tokens]
+    inner = functools.partial(_block_decode_slots, cfg=cfg,
+                              use_kernel=use_kernel, interpret=interpret)
+    fn = paged.paged_block(inner, table, buf_len)
+    (x, _), new_pages = scan_blocks(params["layers"], (x, pos), fn,
+                                    cache=dict(pages))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.dense(x, params["lm_head"])[:, 0]
+    return logits, dict(new_pages)
+
+
+def verify_step_slots_paged(params: dict, cfg: ModelConfig,
+                            tokens: jax.Array, pages: dict,
+                            table: jax.Array, pos: jax.Array, *,
+                            buf_len: int):
+    """``verify_step_slots`` against paged storage -> (logits
+    (B, m, Vpad), new pages)."""
+    from repro.models import paged
+    assert not cfg.sliding_window, "verify_step_slots_paged: non-ring only"
+    x = params["embed"][tokens]
+    inner = functools.partial(_block_verify_slots, cfg=cfg)
+    fn = paged.paged_block(inner, table, buf_len)
+    (x, _), new_pages = scan_blocks(params["layers"], (x, pos), fn,
+                                    cache=dict(pages))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.dense(x, params["lm_head"])
+    return logits, dict(new_pages)

@@ -79,6 +79,15 @@ class SpecDecConfig:
     # quantization tolerance, so the equivalence gate is ACCEPTANCE-RATE
     # statistics, not bit-identity (tests/test_quant_fused.py).
     quant: bool = False
+    # Paged KV arena (DESIGN.md §12): the cached engine's pool stores
+    # KV in fixed-size pages behind a device-resident page table
+    # (models/paged.py) instead of one contiguous arena — buffer growth
+    # becomes a table widening, freed requests return their pages, and
+    # the scheduler's v2 policy can oversubscribe slots against a fixed
+    # page budget.  Opt-in; the contiguous pool stays the bit-identity
+    # oracle (all six strategies produce identical tokens either way).
+    paged: bool = False
+    page_size: int = 64
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:

@@ -80,12 +80,17 @@ import numpy as np
 
 from repro.models import (
     CachePool,
+    PagedCachePool,
     decode_step_slots,
+    decode_step_slots_paged,
     init_cache,
     prefill,
     prefill_slots,
+    prefill_slots_paged,
     verify_step_slots,
+    verify_step_slots_paged,
 )
+from repro.models import paged as paged_kv
 from repro.specdec import verify as V
 from repro.specdec.block_verify import (
     RS_STRATEGIES,
@@ -169,7 +174,8 @@ class CachedSpecDecEngine:
     verification strategies route through the shared block verifier."""
 
     def __init__(self, target: tuple, drafter: tuple, cfg: SpecDecConfig,
-                 pool_slots: int = 1, batched_admission: bool = True):
+                 pool_slots: int = 1, batched_admission: bool = True,
+                 pool_pages: Optional[int] = None):
         self.t_params, self.t_cfg = target
         self.d_params, self.d_cfg = drafter
         assert self.t_cfg.family == "dense" and self.d_cfg.family == "dense"
@@ -183,6 +189,13 @@ class CachedSpecDecEngine:
         self.cfg = cfg
         self.vocab = self.t_cfg.vocab_size
         self.pool_slots = pool_slots
+        # Physical page budget for a paged pool (DESIGN.md §12): None
+        # auto-grows (starts at contiguous-equivalent capacity, doubles
+        # on demand); an int is a HARD budget — reservation past it
+        # raises PagePoolExhausted, and the v2 scheduler uses the
+        # ``page_state``/``request_pages`` accounting below to evict
+        # before ever hitting it.  Ignored for contiguous pools.
+        self.pool_pages = pool_pages
         self.pool: Optional[CachePool] = None
         self._sessions: dict = {}
         # Quantized serving (DESIGN.md §11): W8A8 target weights are used
@@ -201,8 +214,23 @@ class CachedSpecDecEngine:
         self._t_verify = jax.jit(
             lambda p, t, c, pos: verify_step_slots(p, self.t_cfg, t, c, pos))
         # Fused round program (built lazily once the pool geometry is
-        # known; recompiles only when buf_len grows, DESIGN.md §8).
+        # known; rebuilt when buf_len grows — the paged program closes
+        # over the view length, DESIGN.md §8/§12).
         self._fused_round = None
+        self._fused_round_buf = None
+        # Paged model-call jits, keyed by (kind, buf_len): the gathered
+        # view length is a compile-time shape, so each buffer growth
+        # compiles a fresh entry (exactly when the contiguous path
+        # would retrace on its grown arena shapes).
+        self._paged_jits: dict = {}
+        # Persistent contiguous view for the paged kv_fused path (§12):
+        # the fused round runs the SAME contiguous program in both
+        # modes, operating on this gathered working set; page storage
+        # is cold state, synced per-slot only at events (suspend,
+        # resume, admission, mode switch).  ``_view_dirty`` tracks
+        # slots whose view rows are newer than their pages.
+        self._fused_view: Optional[dict] = None
+        self._view_dirty: set = set()
         self._t_prefill = jax.jit(
             lambda p, b, c: prefill(p, self.t_cfg, b, c))
         self._d_prefill = jax.jit(
@@ -241,14 +269,196 @@ class CachedSpecDecEngine:
     # -- pool / session lifecycle ------------------------------------------
     def _ensure_pool(self, buf_len: int) -> CachePool:
         if self.pool is None:
-            self.pool = CachePool(
-                {"target": self.t_cfg, "drafter": self.d_cfg},
-                num_slots=self.pool_slots,
-                rows_per_slot=self.cfg.num_drafts, buf_len=buf_len,
-                quant=self.cfg.quant)
+            cfgs = {"target": self.t_cfg, "drafter": self.d_cfg}
+            if self.cfg.paged:
+                self.pool = PagedCachePool(
+                    cfgs, num_slots=self.pool_slots,
+                    rows_per_slot=self.cfg.num_drafts, buf_len=buf_len,
+                    quant=self.cfg.quant, page_size=self.cfg.page_size,
+                    num_pages=self.pool_pages)
+            else:
+                self.pool = CachePool(
+                    cfgs, num_slots=self.pool_slots,
+                    rows_per_slot=self.cfg.num_drafts, buf_len=buf_len,
+                    quant=self.cfg.quant)
         else:
+            if buf_len > self.pool.buf_len:
+                # Growth re-traces the fused program AND reshapes the
+                # paged view; commit the view first (the scatter must
+                # run against the pre-growth table width).
+                self._view_commit()
             self.pool.ensure_buf(buf_len)
         return self.pool
+
+    def _paged_jit(self, kind: str):
+        """Jitted paged model call for the pool's CURRENT buf_len.
+        ``kind``: "d_step" | "t_verify" | "prefill_target" |
+        "prefill_drafter"."""
+        bl = self.pool.buf_len
+        key = (kind, bl)
+        if key in self._paged_jits:
+            return self._paged_jits[key]
+        cfg = self.cfg
+        if kind == "d_step":
+            fn = jax.jit(
+                lambda p, t, pg, tb, pos: decode_step_slots_paged(
+                    p, self.d_cfg, t, pg, tb, pos, buf_len=bl,
+                    use_kernel=cfg.decode_kernel,
+                    interpret=cfg.pallas_interpret))
+        elif kind == "t_verify":
+            fn = jax.jit(
+                lambda p, t, pg, tb, pos: verify_step_slots_paged(
+                    p, self.t_cfg, t, pg, tb, pos, buf_len=bl))
+        else:
+            mcfg = self.t_cfg if kind == "prefill_target" else self.d_cfg
+            donate = (2,) if jax.default_backend() != "cpu" else ()
+            fn = jax.jit(
+                lambda p, t, pg, tb, pos, w: prefill_slots_paged(
+                    p, mcfg, t, pg, tb, pos, w, buf_len=bl,
+                    use_kernel=cfg.prefill_kernel,
+                    interpret=cfg.pallas_interpret),
+                donate_argnums=donate)
+        self._paged_jits[key] = fn
+        return fn
+
+    # -- paged fused view (§12): pages as cold storage ---------------------
+    # The paged kv_fused path never pays per-round gather/scatter.  The
+    # first fused round gathers ONE contiguous working set; every later
+    # round runs the contiguous program on it (donation-chained, zero
+    # paging cost).  Page storage only has to be current when something
+    # other than the fused round reads it — a suspend detaching a
+    # slot's chains, the host-driven kv path, or buffer growth — so
+    # sync is per-slot and event-rate, not per-round.
+
+    def _view_sync(self, slots) -> None:
+        """Scatter the listed slots' view rows into page storage (rows
+        of every other slot are masked out of the table, so their pages
+        are bit-untouched).  One slot at a time: the row-subset shape
+        is then always (rows_per_slot, n_lp), so the whole event path
+        compiles exactly one scatter program per model — a wave-sized
+        subset would compile one program PER WAVE SIZE, and a mid-run
+        compile is a ~0.5s stall on the serving clock."""
+        if self._fused_view is None:
+            return
+        pool = self.pool
+        for slot in sorted(set(slots) & self._view_dirty):
+            rows = pool.rows_of(slot)
+            tbl = jnp.asarray(pool.page_table[rows])
+            for name in ("target", "drafter"):
+                sub = {kk: leaf[:, rows]
+                       for kk, leaf in self._fused_view[name].items()}
+                pool.update(name, paged_kv.scatter_arena_jit(
+                    pool.pages[name], tbl, sub))
+            self._view_dirty.discard(slot)
+
+    def _view_refresh(self, slots) -> None:
+        """Gather the listed slots' rows from page storage into the
+        view (after an admission prefill or a resumed handle's attach
+        wrote pages behind the view's back).  Per-slot for the same
+        one-compiled-shape reason as ``_view_sync``."""
+        if self._fused_view is None:
+            return
+        pool = self.pool
+        for slot in sorted(set(slots)):
+            rows = pool.rows_of(slot)
+            tbl = jnp.asarray(pool.page_table[rows])
+            for name in ("target", "drafter"):
+                sub = paged_kv.gather_arena_jit(pool.pages[name], tbl,
+                                                buf_len=pool.buf_len)
+                self._fused_view[name] = {
+                    kk: self._fused_view[name][kk].at[:, rows].set(sub[kk])
+                    for kk in sub}
+            self._view_dirty.discard(slot)
+
+    def _view_commit(self) -> None:
+        """Write every dirty slot back to pages and drop the view —
+        the full sync a mode switch or buffer growth needs."""
+        if self._fused_view is not None:
+            self._view_sync(set(self._view_dirty))
+            self._fused_view = None
+        self._view_dirty.clear()
+
+    # -- page accounting (the v2 scheduler's capacity oracle, §12) ---------
+    def has_session(self, uid) -> bool:
+        return uid in self._sessions
+
+    def evict(self, uid) -> None:
+        """Evict a live session mid-generation: drop the session and
+        return its slot (and, paged, its pages) to the pool.  The caller
+        re-admits later with the full ``prompt + output`` prefix —
+        bit-identical resumption, because re-prefilled KV is bitwise
+        equal to decode-built KV and per-request randomness depends only
+        on (uid, blocks), never on which round a block ran in."""
+        self.release(uid)
+
+    def can_suspend(self) -> bool:
+        """Whether preemption can keep KV resident (paged pools only —
+        a contiguous slot's KV dies with the slot)."""
+        return bool(self.cfg.paged)
+
+    def suspend(self, uid) -> dict:
+        """Preempt WITHOUT forfeiting KV: pop the session and detach
+        its page chains.  The returned handle owns the pages; the slot
+        frees for another request, and ``resume`` re-binds the chains
+        to any free slot with a host table rewrite — no prefill, no
+        recompute.  Bit-identity is trivial here: the resumed state is
+        the SAME device bytes the request left behind."""
+        sess = self._sessions.pop(uid)
+        # The handle's pages must hold the slot's CURRENT KV; under the
+        # fused view they may be stale (pages are cold storage), so
+        # flush this one slot's rows first — the only per-suspend cost.
+        self._view_sync({sess.slot})
+        handle = self.pool.detach(sess.slot)
+        handle["pending"] = sess.pending
+        return handle
+
+    def resume(self, uid, handle: dict) -> int:
+        """Re-admit a suspended request from its handle."""
+        assert uid not in self._sessions
+        slot = self.pool.alloc()
+        self.pool.attach(slot, handle)
+        self._view_refresh({slot})
+        self._sessions[uid] = _Session(uid=uid, slot=slot,
+                                       pending=int(handle["pending"]))
+        return slot
+
+    def handle_pages(self, handle: dict) -> int:
+        """Physical pages a suspend handle holds."""
+        return int(handle["chain_len"]) * self.pool.rows_per_slot
+
+    def drop_handle(self, handle: dict) -> None:
+        """Demote a suspended request to hard-evicted: forfeit its
+        pages (it re-admits via re-prefill like any evicted request)."""
+        self.pool.release_handle(handle)
+
+    def page_state(self) -> Optional[dict]:
+        """{free, total, fixed} physical-page accounting, or None when
+        the engine is not paged.  Before the pool exists the whole
+        budget is free."""
+        if not self.cfg.paged:
+            return None
+        if self.pool is not None:
+            return {"free": self.pool.free_pages,
+                    "total": self.pool.num_pages,
+                    "fixed": self.pool.fixed_budget}
+        if self.pool_pages is None:
+            return {"free": None, "total": None, "fixed": False}
+        return {"free": self.pool_pages, "total": self.pool_pages,
+                "fixed": True}
+
+    def request_pages(self, prefix_len: int) -> int:
+        """Pages a request at prefix length ``prefix_len`` holds AFTER
+        its next speculative round: every round reserves through
+        ``pos + L + 1`` positions across its K lanes, so this is the
+        number the scheduler must budget to admit (or keep) it."""
+        per_row = -(-(prefix_len + self.cfg.draft_len + 1)
+                    // self.cfg.page_size)
+        return per_row * self.cfg.num_drafts
+
+    def held_pages(self, uid) -> int:
+        if self.pool is None or uid not in self._sessions:
+            return 0
+        return self.pool.held_pages(self._sessions[uid].slot)
 
     def admit(self, uid: int, prompt: np.ndarray, buf_len: int) -> int:
         """Per-request admission (the reference path): allocate a slot
@@ -271,6 +481,7 @@ class CachedSpecDecEngine:
             _, cache = fn(params, {"tokens": toks}, cache)
             pool.write_prefill(name, slot, cache, pos=len(prompt) - 1)
             self.num_prefill_dispatches += 1
+        self._view_refresh({slot})
         self._sessions[uid] = _Session(uid=uid, slot=slot,
                                        pending=int(prompt[-1]))
         return slot
@@ -293,6 +504,7 @@ class CachedSpecDecEngine:
         if not pairs:
             return
         pool = self._ensure_pool(buf_len)
+        paged = isinstance(pool, PagedCachePool)
         rows_n = pool.num_slots * self.cfg.num_drafts
         max_bucket = _max_bucket(pool.buf_len)
         plans = []
@@ -302,9 +514,21 @@ class CachedSpecDecEngine:
             slot = pool.alloc()
             self._sessions[uid] = _Session(uid=uid, slot=slot,
                                            pending=int(prompt[-1]))
+            if paged:
+                # Reserve the whole prompt's chain up front (host-side
+                # table bookkeeping only) so every chunk's scattered
+                # writes land in mapped pages.
+                pool.reserve(slot, len(prompt) - 1)
             plans.append((slot, prompt[:-1],
                           _bucket_plan(len(prompt) - 1, max_bucket)))
         params = {"target": self.t_params, "drafter": self.d_params}
+        # Paged + fused view live (§12): prefill straight INTO the view
+        # with the contiguous ``prefill_slots`` program — the admitted
+        # slots become dirty (pages get their content only if they
+        # later suspend), and the wave pays zero gather/refresh.
+        # Without a view (first wave, or the host-driven kv path) the
+        # prefills scatter through the page table as before.
+        use_view = paged and self._fused_view is not None
         for c in range(max(len(p[2]) for p in plans)):
             groups = {}
             for slot, toks, chunks in plans:
@@ -327,15 +551,33 @@ class CachedSpecDecEngine:
                     # the input buffer is donated, so pool.caches must
                     # never be left pointing at it (a mid-wave failure
                     # would otherwise corrupt the pool).
-                    pool.update(name, self._slot_prefill[name](
-                        params[name], tok_d, pool.caches[name], pos_d,
-                        write_d))
+                    if use_view:
+                        self._fused_view[name] = self._slot_prefill[name](
+                            params[name], tok_d, self._fused_view[name],
+                            pos_d, write_d)
+                    elif paged:
+                        pool.update(name, self._paged_jit(
+                            "prefill_" + name)(
+                                params[name], tok_d, pool.pages[name],
+                                pool.pt_device(), pos_d, write_d))
+                    else:
+                        pool.update(name, self._slot_prefill[name](
+                            params[name], tok_d, pool.caches[name], pos_d,
+                            write_d))
                     self.num_prefill_dispatches += 1
         for slot, toks, _ in plans:
             pool.set_pos(slot, len(toks))
+        if use_view:
+            self._view_dirty.update(slot for slot, _, _ in plans)
+        elif paged:
+            # The wave's prefills wrote PAGES behind an absent view;
+            # nothing to pull (the next fused round's entry gather or
+            # the kv path's ops read pages directly).
+            pass
 
     def release(self, uid: int) -> None:
         sess = self._sessions.pop(uid)
+        self._view_dirty.discard(sess.slot)
         self.pool.release(sess.slot)
 
     # -- the batched cached block ------------------------------------------
@@ -372,6 +614,19 @@ class CachedSpecDecEngine:
         assert hi <= pool.buf_len, (
             f"speculative block would write through position {hi - 1} but "
             f"the cache arena holds {pool.buf_len}; pass a larger buf_len")
+        paged = isinstance(pool, PagedCachePool)
+        table = None
+        if paged:
+            # The host-driven path's ops read/write page storage
+            # directly; if fused rounds left a newer view, commit it
+            # (mixing modes on one engine stays bit-exact).
+            self._view_commit()
+            # Extend every advancing slot's chain through the round's
+            # write horizon (verify writes [pos, pos + L], catch-up
+            # writes at pos + L) before any device work is dispatched.
+            for sess in sessions:
+                pool.reserve(sess.slot, int(base_pos[sess.slot]) + Lr + 1)
+            table = pool.pt_device()
 
         # --- drafts: L arena decode sweeps, live rows advance -------------
         cur = np.zeros((S * K, 1), np.int32)
@@ -379,12 +634,17 @@ class CachedSpecDecEngine:
             cur[pool.rows_of(sess.slot)] = sess.pending
         d_tokens = np.zeros((r_n, K, Lr), np.int32)
         prob_steps = []
-        d_cache = pool.caches["drafter"]
+        d_cache = pool.pages["drafter"] if paged else pool.caches["drafter"]
         draft_syncs = 0
         for j in range(Lr):
-            logits, d_cache = self._d_step(
-                self.d_params, jnp.asarray(cur), d_cache,
-                jnp.asarray(row_pos0 + j))
+            if paged:
+                logits, d_cache = self._paged_jit("d_step")(
+                    self.d_params, jnp.asarray(cur), d_cache, table,
+                    jnp.asarray(row_pos0 + j))
+            else:
+                logits, d_cache = self._d_step(
+                    self.d_params, jnp.asarray(cur), d_cache,
+                    jnp.asarray(row_pos0 + j))
             self.num_draft_forwards += 1
             live = logits[jnp.asarray(live_rows)]
             p_all = probs_from_logits(live, cfg.temps[0], cfg.top_k, N)
@@ -410,9 +670,14 @@ class CachedSpecDecEngine:
             chunk[pool.rows_of(sess.slot)] = np.concatenate(
                 [np.full((K, 1), sess.pending, np.int32), d_tokens[r]],
                 axis=1)
-        t_logits, t_cache = self._t_verify(
-            self._t_verify_params, jnp.asarray(chunk), pool.caches["target"],
-            jnp.asarray(row_pos0))
+        if paged:
+            t_logits, t_cache = self._paged_jit("t_verify")(
+                self._t_verify_params, jnp.asarray(chunk),
+                pool.pages["target"], table, jnp.asarray(row_pos0))
+        else:
+            t_logits, t_cache = self._t_verify(
+                self._t_verify_params, jnp.asarray(chunk),
+                pool.caches["target"], jnp.asarray(row_pos0))
         self.num_target_forwards += 1
         pool.update("target", t_cache)
         q = probs_from_logits(t_logits[jnp.asarray(live_rows)],
@@ -465,9 +730,15 @@ class CachedSpecDecEngine:
                 rows = pool.rows_of(slot)
                 extra_tokens[rows, 0] = y_l
                 extra_pos[rows] = base_pos[slot] + Lr
-            _, d_cache = self._d_step(
-                self.d_params, jnp.asarray(extra_tokens),
-                pool.caches["drafter"], jnp.asarray(extra_pos, np.int32))
+            if paged:
+                _, d_cache = self._paged_jit("d_step")(
+                    self.d_params, jnp.asarray(extra_tokens),
+                    pool.pages["drafter"], table,
+                    jnp.asarray(extra_pos, np.int32))
+            else:
+                _, d_cache = self._d_step(
+                    self.d_params, jnp.asarray(extra_tokens),
+                    pool.caches["drafter"], jnp.asarray(extra_pos, np.int32))
             self.num_draft_forwards += 1
             pool.update("drafter", d_cache)
 
@@ -499,8 +770,18 @@ class CachedSpecDecEngine:
                 "fused rounds need a device verifier backend ('xla' or "
                 "'pallas'); the 'legacy' host loop cannot run in-program")
 
-        def round_fn(t_params, d_params, t_kv, d_kv, pos, pending, live,
-                     subs):
+        # Paged rounds (§12) run this SAME program: the engine holds a
+        # persistent contiguous view of the page pool (gathered once,
+        # donation-chained round to round), so the steady-state round
+        # pays ZERO paging cost — no table input, no per-round
+        # gather/scatter.  Page storage syncs per-slot at events only
+        # (suspend/resume/admission); an earlier design gathered and
+        # scattered both arenas inside every round and cost ~50% extra
+        # wall per round on CPU.  Bit-identity is untouched: the view
+        # holds exactly the contiguous arena's bytes on live rows, and
+        # dead-row garbage is masked by kv_len like it always was.
+        def round_core(t_params, d_params, t_kv, d_kv, pos, pending, live,
+                       subs):
             live_row = jnp.repeat(live, K)
             # Rows of slots NOT advancing this round (free, or occupied
             # but unlisted) still ride along as dead rows; they must
@@ -600,7 +881,7 @@ class CachedSpecDecEngine:
         # not implement donation and would warn on every dispatch, so
         # only donate where it is real.
         donate = (2, 3, 4) if jax.default_backend() != "cpu" else ()
-        return jax.jit(round_fn, donate_argnums=donate)
+        return jax.jit(round_core, donate_argnums=donate)
 
     def _block_fused(self, subs: Sequence[jax.Array],
                      uids: Sequence[int], admits: Sequence = ()) -> list:
@@ -622,6 +903,12 @@ class CachedSpecDecEngine:
         assert hi <= pool.buf_len, (
             f"speculative block would write through position {hi - 1} but "
             f"the cache arena holds {pool.buf_len}; pass a larger buf_len")
+        paged = isinstance(pool, PagedCachePool)
+        if paged:
+            # Host-side table bookkeeping before dispatch: each advancing
+            # slot's chain must cover the round's write horizon.
+            for sess in sessions:
+                pool.reserve(sess.slot, int(pool.pos[sess.slot]) + L + 1)
 
         live = np.zeros(S, bool)
         pending = np.zeros(S, np.int32)
@@ -633,11 +920,31 @@ class CachedSpecDecEngine:
             pending[sess.slot] = sess.pending
             sub_rows[sess.slot] = sub
 
-        if self._fused_round is None:
+        # The program closes over the view length (paged) and is keyed
+        # to pool geometry; rebuild when the buffer grows.  (The
+        # contiguous program re-traces on grown arena shapes anyway —
+        # rebuilding matches cost, old shapes never recur.)
+        if self._fused_round is None or self._fused_round_buf != pool.buf_len:
             self._fused_round = self._build_fused_round()
+            self._fused_round_buf = pool.buf_len
+        if paged:
+            # First fused round (or first after a mode switch / buffer
+            # growth dropped the view): gather the working set ONCE.
+            # Every later round chains on the previous round's output
+            # arenas — the same donation flow as the contiguous path.
+            if self._fused_view is None:
+                pt = pool.pt_device()
+                self._fused_view = {
+                    name: paged_kv.gather_arena_jit(
+                        pool.pages[name], pt, buf_len=pool.buf_len)
+                    for name in ("target", "drafter")}
+                self._view_dirty.clear()
+            arenas = self._fused_view
+        else:
+            arenas = pool.caches
         t_kv, d_kv, pos_dev, packed = self._fused_round(
             self._t_verify_params, self.d_params,
-            pool.caches["target"], pool.caches["drafter"],
+            arenas["target"], arenas["drafter"],
             pool.pos_device(), jnp.asarray(pending), jnp.asarray(live),
             jnp.stack(sub_rows))
         self.num_draft_forwards += L + 1
@@ -646,7 +953,13 @@ class CachedSpecDecEngine:
         # Install the round's device outputs and use the in-flight gap
         # to dispatch this wave's admission prefills (they consume the
         # round's output arenas, so device execution stays ordered).
-        pool.adopt_round_device({"target": t_kv, "drafter": d_kv}, pos_dev)
+        if paged:
+            self._fused_view = {"target": t_kv, "drafter": d_kv}
+            self._view_dirty.update(s.slot for s in sessions)
+            pool.adopt_pos_device(pos_dev)
+        else:
+            pool.adopt_round_device({"target": t_kv, "drafter": d_kv},
+                                    pos_dev)
         if admits:
             self.admit_batch(admits, pool.buf_len)
 

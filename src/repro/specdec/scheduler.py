@@ -60,7 +60,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import numpy as np
@@ -73,6 +73,11 @@ class Request:
     uid: int
     prompt: np.ndarray
     max_new: int
+    # v2 policy inputs (DESIGN.md §12): higher priority admits first and
+    # is never evicted for a lower-priority candidate; ``on_token``
+    # streams tokens as their round commits instead of at completion.
+    priority: int = 0
+    on_token: Optional[Callable] = None
     # runtime state
     output: list = dataclasses.field(default_factory=list)
     blocks: int = 0
@@ -80,6 +85,24 @@ class Request:
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    # Honest eviction accounting: ``t_submit`` is never reset, so TTFT
+    # and wall_s keep covering time spent evicted; ``evicted_s`` breaks
+    # out how much of that wall a request spent OUT of the live set
+    # after having been admitted at least once, and ``token_times``
+    # (one wall-clock stamp per emitted token, shared with the
+    # ``on_token`` callback order) makes inter-token gaps — including
+    # the gap spanning an eviction — directly measurable.
+    evictions: int = 0
+    evicted_s: float = 0.0
+    token_times: list = dataclasses.field(default_factory=list)
+    tokens_since_admit: int = 0
+    t_admit: Optional[float] = None
+    _t_evict: Optional[float] = None
+    # Suspend handle (paged engines): a preempted request keeps its KV
+    # pages here and resumes by table re-attach — no re-prefill.  Page
+    # pressure may strip the handle (``drop_handle``), demoting it to
+    # an ordinary evicted request that re-prefills on re-admission.
+    _kv_handle: Optional[dict] = None
 
     @property
     def done(self) -> bool:
@@ -96,6 +119,22 @@ class Request:
             return None
         return (self.t_first - self.t_submit) * 1e3
 
+    @property
+    def wall_s(self) -> Optional[float]:
+        """Submission to completion — eviction time included."""
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def itl_ms(self) -> list:
+        """Inter-token latencies (ms) between consecutive emitted
+        tokens.  Tokens committed by the same round share a timestamp
+        (gap 0); the gap that spans an eviction/re-admission cycle
+        carries the full evicted time — nothing vanishes."""
+        t = self.token_times
+        return [(b - a) * 1e3 for a, b in zip(t, t[1:])]
+
 
 @dataclasses.dataclass
 class ServerMetrics:
@@ -106,6 +145,8 @@ class ServerMetrics:
     target_forwards: int = 0
     host_syncs: int = 0          # verification device->host transfers
     draft_syncs: int = 0         # draft-token materialization transfers
+    evictions: int = 0           # capacity evictions (v2 policy)
+    preemptions: int = 0         # max-token fairness preemptions (v2)
     # Wall time is accumulated per ``step()`` call, so ``tokens_per_s``
     # is meaningful whether callers drive ``run()`` or ``step()``
     # directly (``run()`` previously set it; direct ``step()`` callers
@@ -123,6 +164,7 @@ class ServerMetrics:
 
 CACHE_MODES = ("reprefill", "kv", "kv_fused")
 ADMISSION_MODES = ("bucketed", "per_request")
+POLICIES = ("fifo", "v2")
 
 
 class SpecDecServer:
@@ -143,15 +185,61 @@ class SpecDecServer:
     "per_request" (the reference path; also the TTFT baseline in the
     bursty-admission bench).  The policy is passed through to the
     engine per call, never written onto it.
+
+    ``policy`` selects the admission/eviction policy (DESIGN.md §12):
+
+      * "fifo" (default): the original behaviour — queue drains in
+        submission order up to ``max_batch``, a live request holds its
+        slot until completion, no eviction.
+      * "v2": continuous batching with eviction and fairness.  Queued
+        requests admit in (priority desc, evictions asc, submit order)
+        — the evictions term rotates preempted requests behind waiting
+        peers of equal priority.  A candidate that cannot fit (batch
+        full, or — under a fixed paged KV budget — its worst-case page
+        commitment would oversubscribe the pool) may DISPLACE strictly
+        lower-priority live requests.  On a paged engine displacement
+        SUSPENDS: the victim's KV pages detach into a handle (the slot
+        frees, the pages stay resident and unwritable) and re-admission
+        is a host table re-attach — no recompute, so preemption costs
+        ~nothing.  Page pressure can strip a suspended handle (worst-
+        ranked first), demoting the holder to a hard eviction that
+        re-admits via chunked re-prefill of prompt+output; non-paged
+        engines always take that path.  Both are token-invisible:
+        per-request randomness is (uid, blocks)-keyed, resumed pages
+        are the same bytes, and re-prefilled KV is bitwise equal to
+        the decode-built KV it replaces.  ``preempt_tokens=N``
+        additionally preempts any live request that has emitted ≥ N
+        tokens since its last admission while others wait — bounding
+        tail TTFT under a few long-running requests.
+
+    ``min_buf_len`` pins the starting decode-buffer length.  Buffer
+    length changes compiled reduction shapes (module docstring), and
+    under v2 WHICH requests are live — and therefore the natural buffer
+    growth schedule — depends on wall-clock arrival order; pinning the
+    buffer to the trace's maximum requirement makes outputs bit-
+    comparable across policies and load patterns.
     """
 
     def __init__(self, engine, max_batch: int = 8,
                  batched: bool = False, cache_mode: str = "reprefill",
-                 admission: str = "bucketed"):
+                 admission: str = "bucketed", policy: str = "fifo",
+                 preempt_tokens: Optional[int] = None,
+                 min_buf_len: int = 0):
         if cache_mode not in CACHE_MODES:
             raise ValueError(f"unknown cache_mode {cache_mode!r}")
         if admission not in ADMISSION_MODES:
             raise ValueError(f"unknown admission mode {admission!r}")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}")
+        if policy == "v2" and cache_mode not in ("kv", "kv_fused"):
+            raise ValueError(
+                "policy='v2' needs cache_mode 'kv' or 'kv_fused' — "
+                "eviction releases engine sessions")
+        if preempt_tokens is not None:
+            if policy != "v2":
+                raise ValueError("preempt_tokens needs policy='v2'")
+            if preempt_tokens < 1:
+                raise ValueError("preempt_tokens must be >= 1")
         if cache_mode in ("kv", "kv_fused"):
             if not hasattr(engine, "admit"):
                 raise TypeError(
@@ -165,27 +253,181 @@ class SpecDecServer:
         self.batched = batched
         self.cache_mode = cache_mode
         self.admission = admission
+        self.policy = policy
+        self.preempt_tokens = preempt_tokens
         self.queue: deque = deque()
         self.live: list = []
         self._uid = 0
-        self._buf_len = 0
+        self._buf_len = max(0, int(min_buf_len))
         self.metrics = ServerMetrics()
 
-    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+    def submit(self, prompt: np.ndarray, max_new: int = 32, *,
+               priority: int = 0, on_token: Optional[Callable] = None) -> int:
+        """Queue a request.  ``priority`` orders v2 admission (ignored
+        under fifo); ``on_token(uid, token)`` is called once per emitted
+        token, at the round commit that produced it, in emission
+        order."""
         self._uid += 1
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      max_new=max_new, t_submit=time.time())
+                      max_new=max_new, priority=priority, on_token=on_token,
+                      t_submit=time.time())
         self.queue.append(req)
         return req.uid
 
+    # ---- admission / eviction policy ---------------------------------
+
+    @staticmethod
+    def _order(req: Request):
+        """v2 queue order: priority first, then rotate evicted/preempted
+        requests behind same-priority waiters, then submission order."""
+        return (-req.priority, req.evictions, req.t_submit, req.uid)
+
+    def _mark_admitted(self, req: Request, now: float) -> None:
+        if req._t_evict is not None:
+            req.evicted_s += now - req._t_evict
+            req._t_evict = None
+        req.t_admit = now
+        req.tokens_since_admit = 0
+
+    def _evict(self, req: Request, now: float) -> None:
+        """Displace ``req`` from the live set and requeue it.  On a
+        paged engine this SUSPENDS: the request's KV pages detach into
+        a handle (``Request._kv_handle``) and re-admission is a table
+        re-attach — no recompute.  Otherwise (or after the handle is
+        stripped under page pressure) the session is released outright
+        and re-admission re-prefills prompt+output, which rebuilds KV
+        bitwise equal to the state just dropped — either way the
+        displacement is token-invisible (DESIGN.md §12)."""
+        self.live.remove(req)
+        if self.engine.has_session(req.uid):
+            if getattr(self.engine, "can_suspend", lambda: False)():
+                req._kv_handle = self.engine.suspend(req.uid)
+            else:
+                self.engine.evict(req.uid)
+        req.evictions += 1
+        req._t_evict = now
+        self.queue.append(req)
+
+    def _lifetime_pages(self, req: Request) -> int:
+        """Worst-case page commitment: the pages ``req`` will hold once
+        fully decoded.  Admission against lifetime commitments (not
+        current holdings) guarantees mid-round ``reserve`` can never
+        exhaust a fixed page budget."""
+        return self.engine.request_pages(len(req.prompt) + req.max_new)
+
+    def _pick_victim(self, below_priority: int, protect: set):
+        """Lowest-priority live request strictly below
+        ``below_priority`` (never admitted this step), shortest prefix
+        first — the cheapest re-prefill loses its slot."""
+        cands = [r for r in self.live
+                 if r.priority < below_priority and id(r) not in protect]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.priority,
+                                         len(r.prompt) + len(r.output),
+                                         r.uid))
+
+    def _admit_v2(self, now: float) -> list:
+        page_state = self.engine.page_state()
+        fixed = bool(page_state and page_state.get("fixed"))
+        newly: list = []
+        protect: set = set()
+        while self.queue:
+            cand = min(self.queue, key=self._order)
+            blocked_by_pages = False
+            if fixed:
+                # Pages spoken for: live requests count their LIFETIME
+                # commitment (they grow every round, worst case to full
+                # decode); suspended queue entries count their handle's
+                # actual holdings (detached chains never grow — growth
+                # re-enters through this same check at resume, when the
+                # resumed request's lifetime is charged as ``need``).
+                committed = sum(self._lifetime_pages(r) for r in self.live)
+                committed += sum(self.engine.handle_pages(q._kv_handle)
+                                 for q in self.queue
+                                 if q._kv_handle is not None and q is not cand)
+                need = self._lifetime_pages(cand)
+                if need > page_state["total"]:
+                    raise ValueError(
+                        f"request uid={cand.uid} needs {need} pages but "
+                        f"the pool only has {page_state['total']}")
+                blocked_by_pages = committed + need > page_state["total"]
+            if len(self.live) >= self.max_batch or blocked_by_pages:
+                # Page pressure reclaims from suspended holders first:
+                # stripping the worst-ranked handle behind ``cand``
+                # frees pages without touching the live set (the holder
+                # re-admits later via re-prefill).  Handles ranked
+                # AHEAD of cand are never stripped — those requests
+                # resume before cand anyway.
+                if blocked_by_pages and len(self.live) < self.max_batch:
+                    holders = [q for q in self.queue
+                               if q._kv_handle is not None and q is not cand
+                               and self._order(q) > self._order(cand)]
+                    if holders:
+                        worst = max(holders, key=self._order)
+                        self.engine.drop_handle(worst._kv_handle)
+                        worst._kv_handle = None
+                        self.metrics.evictions += 1
+                        continue
+                victim = self._pick_victim(cand.priority, protect)
+                if victim is None:
+                    break
+                self._evict(victim, now)
+                self.metrics.evictions += 1
+                continue
+            self.queue.remove(cand)
+            self.live.append(cand)
+            protect.add(id(cand))
+            self._mark_admitted(cand, now)
+            if cand._kv_handle is not None:
+                # Resume from the suspend handle: session re-binds to a
+                # free slot host-side, KV already resident — the request
+                # advances THIS round (no prefill to overlap), which is
+                # token-invisible because randomness is (uid, blocks)-
+                # keyed, never round-keyed.
+                self.engine.resume(cand.uid, cand._kv_handle)
+                cand._kv_handle = None
+            else:
+                newly.append(cand)
+        return newly
+
+    def _preempt(self, now: float) -> None:
+        """Fairness rotation: while requests wait in the queue, evict
+        live requests that have emitted ``preempt_tokens`` or more
+        tokens since their last admission.  Their incremented eviction
+        count sorts them behind same-priority waiters, so slots rotate
+        instead of ping-ponging."""
+        if not self.preempt_tokens or not self.queue:
+            return
+        for req in list(self.live):
+            if req.done or req.tokens_since_admit < self.preempt_tokens:
+                continue
+            # Only preempt when some waiter would actually outrank the
+            # displaced request in the admission order — otherwise the
+            # eviction is pure churn: the same request re-admits
+            # immediately and pays a re-prefill for nothing (a high-
+            # priority request is never preempted for low-priority
+            # waiters).
+            displaced = (-req.priority, req.evictions + 1,
+                         req.t_submit, req.uid)
+            if not any(self._order(q) < displaced for q in self.queue):
+                continue
+            self._evict(req, now)
+            self.metrics.preemptions += 1
+
     def _admit(self) -> list:
-        """Move queued requests into the live set (up to ``max_batch``);
-        returns the newly admitted requests."""
+        """Move queued requests into the live set; returns the newly
+        admitted requests."""
+        now = time.time()
+        if self.policy == "v2":
+            self._preempt(now)
+            return self._admit_v2(now)
         newly = []
         while self.queue and len(self.live) < self.max_batch:
             req = self.queue.popleft()
             self.live.append(req)
             newly.append(req)
+            self._mark_admitted(req, now)
         return newly
 
     def _required_buf(self, req: Request) -> int:
@@ -226,9 +468,15 @@ class SpecDecServer:
             # the prefix-tail == pending contract loudly.
             tails = [int(r.output[-1]) if r.output else int(r.prompt[-1])
                      for r in advancing]
+            # Admission prefixes carry prompt+output: a re-admitted
+            # (evicted) request re-prefills everything it has emitted
+            # so far, rebuilding KV bitwise equal to the state it lost.
+            # For fresh requests output is empty and this is the prompt.
             outs = self.engine.round_with_admission(
                 subs, [r.uid for r in advancing],
-                [(r.uid, r.prompt) for r in newly], self._buf_len,
+                [(r.uid, np.concatenate([r.prompt,
+                                         np.asarray(r.output, np.int32)]))
+                 for r in newly], self._buf_len,
                 tails=tails)
         else:
             prefixes = [np.concatenate([r.prompt,
@@ -252,16 +500,25 @@ class SpecDecServer:
             getattr(self.engine, "num_draft_syncs", 0) - ds0)
 
         finished = []
+        t_commit = time.time()
         for req, out in zip(advancing, outs):
-            req.output.extend(out.new_tokens)
+            # Emit only up to max_new: the block may overshoot on its
+            # last round, and streamed tokens / timestamps must match
+            # the final (trimmed) output exactly.
+            emit = list(out.new_tokens)[:req.max_new - len(req.output)]
+            req.output.extend(emit)
             req.blocks += 1
             req.accepted += out.accepted
+            req.tokens_since_admit += len(emit)
             self.metrics.host_syncs += out.verify_syncs
             if req.t_first is None:
-                req.t_first = time.time()
+                req.t_first = t_commit
+            for tok in emit:
+                req.token_times.append(t_commit)
+                if req.on_token is not None:
+                    req.on_token(req.uid, int(tok))
             if req.done:
-                req.output = req.output[:req.max_new]
-                req.t_done = time.time()
+                req.t_done = t_commit
                 finished.append(req)
         for req in finished:
             self.live.remove(req)

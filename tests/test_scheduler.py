@@ -1,12 +1,21 @@
 """Serving scheduler: queueing, admission, completion, metrics, RNG
-stream derivation, and cache_mode="kv" equivalence."""
+stream derivation, cache_mode="kv" equivalence, and the paged-arena
+continuous-batching v2 policy (eviction, preemption, streaming —
+DESIGN.md §12)."""
+
+import dataclasses
 
 import jax
 import numpy as np
 import pytest
 
 from repro.models import ModelConfig, init_params
-from repro.specdec import CachedSpecDecEngine, SpecDecConfig, SpecDecEngine
+from repro.specdec import (
+    STRATEGIES,
+    CachedSpecDecEngine,
+    SpecDecConfig,
+    SpecDecEngine,
+)
 from repro.specdec.scheduler import SpecDecServer
 
 TCFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=48,
@@ -139,3 +148,201 @@ def test_wall_s_accumulates_under_direct_step(pair):
     assert m.total_tokens >= 4
     assert m.wall_s > 0
     assert m.tokens_per_s < 1e7, "tokens_per_s divided by the 1e-9 floor"
+
+
+# ---- paged KV arena + continuous batching v2 (DESIGN.md §12) ---------
+
+PROMPTS = [np.arange(1, 1 + n, dtype=np.int32) % 31 + 1
+           for n in (3, 5, 4, 6)]
+MAX_NEW = 6
+
+
+def _min_buf(sd, prompts=PROMPTS, max_new=MAX_NEW):
+    """Pin the buffer to the trace's maximum requirement so outputs are
+    bit-comparable across policies (buffer LENGTH changes compiled
+    reduction shapes; v2's live set depends on arrival order)."""
+    return max(len(p) for p in prompts) + max_new + sd.draft_len + 2
+
+
+def _oracle(pair, sd, prompts=PROMPTS, priorities=None):
+    """Sequential reprefill FIFO reference outputs, keyed by uid."""
+    tp, dp = pair
+    srv = SpecDecServer(SpecDecEngine((tp, TCFG), [(dp, DCFG)], sd),
+                        max_batch=2, cache_mode="reprefill",
+                        min_buf_len=_min_buf(sd, prompts))
+    for i, p in enumerate(prompts):
+        srv.submit(p, max_new=MAX_NEW,
+                   priority=0 if priorities is None else priorities[i])
+    done = srv.run(jax.random.PRNGKey(7))
+    return {r.uid: list(r.output) for r in done}
+
+
+def _paged_engine(pair, sd, *, pool_slots=2, pool_pages=None):
+    tp, dp = pair
+    sdp = dataclasses.replace(sd, paged=True, page_size=8)
+    return CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sdp,
+                               pool_slots=pool_slots,
+                               pool_pages=pool_pages)
+
+
+def test_v2_policy_validation(pair):
+    tp, dp = pair
+    ref = SpecDecEngine((tp, TCFG), [(dp, DCFG)], SD)
+    cached = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), SD, pool_slots=2)
+    with pytest.raises(ValueError, match="unknown policy"):
+        SpecDecServer(cached, cache_mode="kv", policy="mystery")
+    with pytest.raises(ValueError, match="v2"):
+        SpecDecServer(ref, cache_mode="reprefill", policy="v2")
+    with pytest.raises(ValueError, match="preempt_tokens"):
+        SpecDecServer(ref, cache_mode="reprefill", preempt_tokens=4)
+    with pytest.raises(ValueError, match="preempt_tokens"):
+        SpecDecServer(cached, cache_mode="kv", policy="v2",
+                      preempt_tokens=0)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_oversubscribed_paged_v2_bit_identical_all_strategies(
+        pair, strategy):
+    """The PR's acceptance gate: an oversubscribed trace on the paged
+    arena under the v2 policy (fixed page budget, preemption rotating
+    slots) emits tokens bit-identical to the sequential reprefill
+    reference, for every strategy, with the fused round's zero
+    draft-sync contract intact."""
+    sd = dataclasses.replace(SD, strategy=strategy)
+    want = _oracle(pair, sd)
+    eng = _paged_engine(pair, sd, pool_pages=24)
+    srv = SpecDecServer(eng, max_batch=2, cache_mode="kv_fused",
+                        policy="v2", preempt_tokens=3,
+                        min_buf_len=_min_buf(sd))
+    for p in PROMPTS:
+        srv.submit(p, max_new=MAX_NEW)
+    done = srv.run(jax.random.PRNGKey(7))
+    assert {r.uid: list(r.output) for r in done} == want
+    assert srv.metrics.preemptions > 0, "trace did not rotate slots"
+    assert srv.metrics.draft_syncs == 0
+    assert eng.pool.num_free == eng.pool.num_slots
+    st = eng.page_state()
+    assert st["free"] == st["total"]
+
+
+def test_mid_generation_eviction_readmission_bit_identical(pair):
+    """A late high-priority arrival evicts a mid-generation request
+    (session released, pages freed); the victim re-admits via a
+    re-prefill of prompt+output and finishes with the exact tokens it
+    would have emitted uninterrupted — eviction time stays visible in
+    the victim's accounting instead of vanishing."""
+    prios = [0, 0, 5, 0]
+    want = _oracle(pair, SD, priorities=prios)
+    for cache_mode in ("kv", "kv_fused"):
+        eng = _paged_engine(pair, SD, pool_pages=16)
+        srv = SpecDecServer(eng, max_batch=2, cache_mode=cache_mode,
+                            policy="v2", min_buf_len=_min_buf(SD))
+        key = jax.random.PRNGKey(7)
+        srv.submit(PROMPTS[0], max_new=MAX_NEW)
+        srv.submit(PROMPTS[1], max_new=MAX_NEW)
+        srv.step(key)
+        srv.step(key)                          # both mid-generation
+        srv.submit(PROMPTS[2], max_new=MAX_NEW, priority=5)
+        srv.submit(PROMPTS[3], max_new=MAX_NEW)
+        done = list(srv.run(key))
+        assert {r.uid: list(r.output) for r in done} == want
+        assert srv.metrics.evictions >= 1
+        victims = [r for r in done if r.evictions]
+        assert victims, "no request was evicted"
+        for r in victims:
+            assert r.evicted_s > 0
+        for r in done:
+            assert len(r.token_times) == len(r.output)
+            assert r.token_times == sorted(r.token_times)
+            assert r.wall_s >= r.evicted_s
+        assert eng.pool.num_free == eng.pool.num_slots
+
+
+def test_preemption_rotates_and_reuses_slots(pair):
+    """Equal-priority fairness: with preempt_tokens=2 every live
+    request yields its slot (and pages) after two tokens while others
+    wait; rotation must not change a single token."""
+    want = _oracle(pair, SD)
+    eng = _paged_engine(pair, SD)
+    srv = SpecDecServer(eng, max_batch=2, cache_mode="kv",
+                        policy="v2", preempt_tokens=2,
+                        min_buf_len=_min_buf(SD))
+    for p in PROMPTS:
+        srv.submit(p, max_new=MAX_NEW)
+    done = srv.run(jax.random.PRNGKey(7))
+    assert {r.uid: list(r.output) for r in done} == want
+    assert srv.metrics.preemptions >= len(PROMPTS), \
+        "every request should be preempted at least once"
+    # Rotation means slots were released and re-allocated repeatedly.
+    assert max(r.evictions for r in done) >= 1
+    assert eng.pool.num_free == eng.pool.num_slots
+
+
+def test_on_token_streaming_matches_final_output(pair):
+    """``on_token`` fires once per emitted token, in emission order,
+    at round-commit time — the streamed sequence IS the final output."""
+    streamed = {}
+    eng = _paged_engine(pair, SD)
+    srv = SpecDecServer(eng, max_batch=2, cache_mode="kv_fused",
+                        policy="v2", preempt_tokens=3,
+                        min_buf_len=_min_buf(SD))
+    for p in PROMPTS:
+        srv.submit(p, max_new=MAX_NEW,
+                   on_token=lambda uid, tok: streamed.setdefault(
+                       uid, []).append(tok))
+    done = srv.run(jax.random.PRNGKey(7))
+    assert streamed == {r.uid: list(r.output) for r in done}
+
+
+def test_bucket_straddling_prompts_paged_bit_identical(pair):
+    """Prompts whose lengths land in different admission buckets join
+    one wave; the paged prefill scatter must stay bit-identical across
+    the bucket split."""
+    prompts = [np.arange(1, 1 + n, dtype=np.int32) % 31 + 1
+               for n in (3, 9, 4, 12)]
+    want = _oracle(pair, SD, prompts=prompts)
+    eng = _paged_engine(pair, SD, pool_slots=4)
+    srv = SpecDecServer(eng, max_batch=4, cache_mode="kv_fused",
+                        min_buf_len=_min_buf(SD, prompts))
+    for p in prompts:
+        srv.submit(p, max_new=MAX_NEW)
+    done = srv.run(jax.random.PRNGKey(7))
+    assert {r.uid: list(r.output) for r in done} == want
+
+
+def test_fifo_fixed_page_budget_exhaustion_is_loud(pair):
+    """FIFO does no page accounting: oversubscribing a fixed budget
+    must fail loudly mid-admission, not corrupt state — managing the
+    budget is exactly what policy='v2' adds."""
+    from repro.models import PagePoolExhausted
+    eng = _paged_engine(pair, SD, pool_pages=4)
+    srv = SpecDecServer(eng, max_batch=2, cache_mode="kv",
+                        min_buf_len=_min_buf(SD))
+    for p in PROMPTS:
+        srv.submit(p, max_new=MAX_NEW)
+    with pytest.raises(PagePoolExhausted):
+        srv.run(jax.random.PRNGKey(7))
+
+
+@pytest.mark.slow
+def test_paged_v2_bit_identical_under_pallas_kernels(pair):
+    """xla/pallas leg of the paged gate: with the decode + prefill
+    Pallas kernels on (interpret mode — the kernel body), paged serving
+    matches CONTIGUOUS serving under the same kernels bit-for-bit (the
+    kernels run on the gathered view, so the indirection cancels)."""
+    sd = dataclasses.replace(SD, decode_kernel=True, prefill_kernel=True,
+                             pallas_interpret=True)
+    outs = {}
+    for paged in (False, True):
+        tp, dp = pair
+        sdx = dataclasses.replace(sd, paged=paged, page_size=8)
+        eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sdx,
+                                  pool_slots=2)
+        srv = SpecDecServer(eng, max_batch=2, cache_mode="kv_fused",
+                            policy="v2", preempt_tokens=3,
+                            min_buf_len=_min_buf(sd))
+        for p in PROMPTS:
+            srv.submit(p, max_new=MAX_NEW)
+        done = srv.run(jax.random.PRNGKey(7))
+        outs[paged] = {r.uid: list(r.output) for r in done}
+    assert outs[True] == outs[False]
