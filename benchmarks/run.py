@@ -12,6 +12,9 @@ scheduler tokens/s, quant-vs-f32 serving deltas, per-strategy
 race-dispatch counts, the ``open_loop`` rows — p50/p99 TTFT and ITL
 for FIFO-contiguous vs paged-v2, paged-vs-contiguous bit-identity,
 the paging/rotation tokens-per-s ratios the nightly gates read — the
+``chaos`` rows: survivor bit-identity, zero-wedged, and metrics-
+consistency under >= 5%-per-class deterministic fault injection plus
+the degradation-ladder walk (DESIGN.md §13) — the
 ``wz_pipeline`` rows — samples/s for loop vs xla vs pallas, xla↔pallas
 equality, Prop.-4 match bound — and the ``roofline_kernels`` rows with
 bytes-moved / achieved-GB/s / %-of-memory-peak per coupling kernel) to
@@ -34,6 +37,7 @@ FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
 def quick(out_path: str) -> None:
     from benchmarks import (
+        bench_chaos,
         bench_open_loop,
         bench_roofline,
         bench_serving_backends,
@@ -43,6 +47,7 @@ def quick(out_path: str) -> None:
     payload["open_loop"] = bench_open_loop.run(fast=True)
     payload["wz_pipeline"] = bench_wz_pipeline.run(fast=True)
     payload["roofline_kernels"] = bench_roofline.run(fast=True)["kernels"]
+    payload["chaos"] = bench_chaos.run(fast=True)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {out_path}")
@@ -72,8 +77,10 @@ def main() -> None:
         bench_table2_diverse_drafts,
         bench_wz_pipeline,
     )
+    from benchmarks import bench_chaos
     suites = [
         ("fig6", bench_fig6_toy_acceptance),
+        ("chaos", bench_chaos),
         ("table1", bench_table1_iid_drafts),
         ("table2", bench_table2_diverse_drafts),
         ("serving", bench_serving_backends),

@@ -75,6 +75,10 @@ def _kernel(q_off_ref, kv_len_ref, q_ref, k_ref, v_ref, *refs,
         mask &= k_pos > q_pos - window
     s = jnp.where(mask, s, -jnp.inf)
 
+    # Masked-row contract shared with ref.py's masked_softmax: a row
+    # whose running max never leaves -inf (fully masked so far) pins the
+    # exp argument at -inf via m_safe, so its weights are exactly 0.0 —
+    # never a NaN that needs scrubbing after the fact.
     m_prev = m_ref[:, 0]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
     m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -88,8 +92,11 @@ def _kernel(q_off_ref, kv_len_ref, q_ref, k_ref, v_ref, *refs,
 
     @pl.when(ik == n_kv - 1)
     def _emit():
-        # Fully-masked query rows (bucket padding) have l == 0; the
-        # 1e-30 floor turns them into zeros rather than NaN.
+        # Fully-masked query rows (bucket padding, kv_len == 0) have
+        # l == 0; the 1e-30 floor turns them into zeros rather than
+        # NaN — matching ref.py's masked_softmax denominator floor
+        # bitwise.  Rows with any valid key have l >= 1 (the max entry
+        # contributes exp(0) = 1), so the floor is inert there.
         denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 

@@ -11,6 +11,34 @@ import jax
 import jax.numpy as jnp
 
 
+def masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    """Softmax over the last axis with ``mask`` selecting valid entries,
+    under the repo-wide masked-row contract shared with the Pallas
+    kernel (kernel.py ``_kernel``):
+
+      * rows with >= 1 valid entry: bitwise identical to
+        ``jax.nn.softmax`` over the ``-inf``-masked scores — the row
+        max is finite, so the ``m_safe`` substitution is a no-op, the
+        max entry contributes ``exp(0) = 1`` so the denominator is
+        >= 1 and the ``1e-30`` floor is inert, and masked entries are
+        ``exp(-inf - m) = 0.0`` exactly;
+      * fully-masked rows: all-zero weights (the kernel's running max
+        never leaves its ``-inf`` init, so ``m_safe`` pins the exps'
+        argument at ``-inf`` and every weight underflows to exactly
+        0.0), instead of softmax's 0/0 = NaN.
+
+    The old reference computed NaN weights first and scrubbed them with
+    ``isnan`` after the fact; that disagreed with the kernel whenever a
+    score was NaN for any OTHER reason (poisoned KV), silently zeroing
+    corruption the kernel would propagate.  Producing zeros directly
+    keeps the two paths bitwise aligned on every masked-row shape."""
+    neg = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(neg, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(mask, jnp.exp(neg - m_safe), 0.0)
+    return p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         q_offset: Optional[jax.Array] = None,
                         kv_len: Optional[jax.Array] = None,
@@ -45,8 +73,6 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
         mask &= k_pos[None, None, :] <= q_pos[:, :, None]
     if window:
         mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
-    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
-    w = jax.nn.softmax(scores, axis=-1)
-    w = jnp.where(jnp.isnan(w), 0.0, w)
+    w = masked_softmax(scores, mask[:, None, None])
     out = jnp.einsum("bhgst,bhtd->bhgsd", w, vf)
     return out.reshape(b, h, s, d).astype(q.dtype)

@@ -78,6 +78,21 @@ def main():
                     help="route admission prefill chunks through the "
                          "flash-attention Pallas kernel (numerically "
                          "equivalent, not bit-equal)")
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="chaos mode (DESIGN.md §13): inject every "
+                         "fault class at this per-request-per-round "
+                         "rate; survivors replay bit-identically")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="deterministic injection seed for --fault-rate")
+    ap.add_argument("--retry-budget", type=int, default=None,
+                    help="per-request fault retries before quarantine "
+                         "(default 2; passing it arms the guard layer)")
+    ap.add_argument("--round-timeout-ms", type=float, default=None,
+                    help="per-round wall-clock watchdog budget")
+    ap.add_argument("--degrade-after", type=int, default=None,
+                    help="consecutive faults before stepping down the "
+                         "degradation ladder (pallas->xla, quant->f32, "
+                         "kv_fused->kv->reprefill)")
     args = ap.parse_args()
     if args.cache_mode == "kv_fused" and args.backend == "legacy":
         ap.error("--cache-mode kv_fused needs a device verifier backend "
@@ -90,6 +105,7 @@ def main():
     sys.path.insert(0, os.path.join(os.path.dirname(__file__),
                                     "..", "..", ".."))
     from benchmarks.lm_pair import bench_prompts, get_pair
+    from repro.serving import FaultPlan
     from repro.specdec import (
         CachedSpecDecEngine,
         SpecDecConfig,
@@ -110,12 +126,22 @@ def main():
                                   pool_slots=args.max_batch)
     else:
         eng = SpecDecEngine(target, [drafter], cfg)
+    plan = None
+    if args.fault_rate is not None:
+        slow_ms = (args.round_timeout_ms * 2.0
+                   if args.round_timeout_ms else 100.0)
+        plan = FaultPlan.uniform(args.fault_rate, seed=args.fault_seed,
+                                 slow_ms=slow_ms)
     server = SpecDecServer(eng, max_batch=args.max_batch,
                            batched=args.batched,
                            cache_mode=args.cache_mode,
                            admission=args.admission,
                            policy=args.policy,
-                           preempt_tokens=args.preempt_tokens)
+                           preempt_tokens=args.preempt_tokens,
+                           fault_plan=plan,
+                           retry_budget=args.retry_budget,
+                           round_timeout_ms=args.round_timeout_ms,
+                           degrade_after=args.degrade_after)
     for p in bench_prompts(args.requests):
         server.submit(p, max_new=args.max_new)
     done = server.run(jax.random.PRNGKey(0))
@@ -132,6 +158,13 @@ def main():
           f"verify-syncs={m.host_syncs} draft-syncs={m.draft_syncs} "
           f"evictions={m.evictions} preemptions={m.preemptions} "
           f"over {len(done)} requests")
+    if server.guarded:
+        print(f"faults={dict(m.faults)} retries={m.retries} "
+              f"quarantined={m.quarantined} "
+              f"watchdog-trips={m.watchdog_trips} "
+              f"watchdog-accepts={m.watchdog_accepts} "
+              f"degradations={[d['step'] for d in m.degradations]} "
+              f"failed={len(server.failed)}")
 
 
 if __name__ == "__main__":

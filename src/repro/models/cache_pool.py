@@ -253,6 +253,31 @@ class CachePool:
             per_slot[s] = default
         return np.repeat(per_slot, self.rows_per_slot).astype(np.int32)
 
+    # -- fault recovery (DESIGN.md §13) ------------------------------------
+    def drop_device_mirrors(self) -> None:
+        """Invalidate the lazily-materialized device mirrors after a
+        guarded fault discarded a round mid-flight.  The host views
+        (``pos``, and the page table in the paged pool) are
+        authoritative and re-upload on next use, so device state that
+        adopted an aborted round's in-flight outputs can never leak
+        into the replay."""
+        self._pos_dev = None
+
+    def scrub(self) -> None:
+        """Zero every arena — the NaN-poisoning recovery (DESIGN.md
+        §13).  Finite garbage in dead arena regions is masked out of
+        every read (the §7/§12 dead-row argument), but NaN/Inf garbage
+        is NOT: a masked attention weight of 0.0 against a NaN value
+        still contributes ``0 * NaN = NaN`` to the output sum, so
+        possibly-poisoned storage must be rebuilt, not reused.  Callers
+        displace every session first — all slots must be free."""
+        assert len(self._free) == self.num_slots, \
+            "scrub with occupied slots; displace sessions first"
+        self.caches = {name: self._init_arena(cfg, self.buf_len)
+                       for name, cfg in self.cfgs.items()}
+        self.pos[:] = 0
+        self._pos_dev = None
+
 
 @jax.jit
 def _grow_pages_leaf(new_leaf, old_leaf):
@@ -533,3 +558,24 @@ class PagedCachePool(CachePool):
         debugging only — the serving paths never materialize this)."""
         return P.gather_arena_jit(self.pages[name], self.pt_device(),
                                   buf_len=self.buf_len)
+
+    # -- fault recovery (DESIGN.md §13) ------------------------------------
+    def drop_device_mirrors(self) -> None:
+        super().drop_device_mirrors()
+        self._pt_dev = None
+
+    def scrub(self) -> None:
+        """Zero page storage (see ``CachePool.scrub``).  All slots must
+        be free AND all pages returned — a suspend handle's detached
+        pages are invisible to the pool, so callers strip outstanding
+        handles first (their bytes may be poisoned too)."""
+        assert len(self._free) == self.num_slots, \
+            "scrub with occupied slots; displace sessions first"
+        assert len(self._free_pages) == self.num_pages, \
+            "scrub with pages still held; strip suspend handles first"
+        assert not self.page_table.any()
+        self.pages = {name: self._init_pages(cfg, self.num_pages)
+                      for name, cfg in self.cfgs.items()}
+        self.pos[:] = 0
+        self._pos_dev = None
+        self._pt_dev = None

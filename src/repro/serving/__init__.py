@@ -1,5 +1,38 @@
-"""Serving-side optimizations: W8A8 int8 quantized verify path."""
+"""Serving-side infrastructure: W8A8 int8 quantized verify path, and
+the fault-tolerance layer (deterministic injection, round guards,
+watchdogs — DESIGN.md §13)."""
 
+from repro.serving.faults import (
+    FAULT_KINDS,
+    FaultPlan,
+    InjectedFault,
+    poison_outcome,
+)
+from repro.serving.guard import (
+    GuardViolation,
+    InvalidRequest,
+    RoundWatchdog,
+    WatchdogTimeout,
+    check_packed,
+    validate_outcome,
+    validate_prompt,
+)
 from repro.serving.quant import qdot, quantize_params, quantize_weight, verify_step_q
 
-__all__ = ["qdot", "quantize_params", "quantize_weight", "verify_step_q"]
+__all__ = [
+    "FAULT_KINDS",
+    "FaultPlan",
+    "GuardViolation",
+    "InjectedFault",
+    "InvalidRequest",
+    "RoundWatchdog",
+    "WatchdogTimeout",
+    "check_packed",
+    "poison_outcome",
+    "qdot",
+    "quantize_params",
+    "quantize_weight",
+    "validate_outcome",
+    "validate_prompt",
+    "verify_step_q",
+]

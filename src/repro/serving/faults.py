@@ -1,0 +1,130 @@
+"""Deterministic fault injection for chaos serving (DESIGN.md §13).
+
+A ``FaultPlan`` decides, for every (fault kind, request, block, retry
+attempt), whether that fault fires — by hashing the tuple, never by
+consuming an RNG stream.  Two properties follow:
+
+  * **Reproducible chaos.**  The same plan over the same trace injects
+    the same faults in the same rounds, regardless of wall-clock timing
+    or execution order; a chaos failure replays exactly.
+  * **Retries re-draw.**  The attempt index (the request's retry
+    counter) is part of the key, so a replayed round faces a fresh
+    draw at the same rate — persistent-failure quarantine is still
+    reachable (rate 1.0, or an unlucky seed), but the common case is a
+    clean replay, which is what real transient faults look like.
+
+The kinds mirror the real failure surface of the serving stack:
+
+  ``pool_exhausted``   ``PagePoolExhausted`` from the paged arena's
+                       pre-round ``reserve`` (pre-dispatch, state clean)
+  ``oom``              arena-growth / allocator failure (pre-dispatch)
+  ``kernel_dispatch``  a compiled round program dying after dispatch
+                       (post: device state advanced, results lost)
+  ``nan_logits``       NaN/Inf-poisoned logits corrupting the packed
+                       fetch (post + poisoning: arenas must be
+                       scrubbed, not just discarded)
+  ``slow_round``       a round stalling past the watchdog budget
+
+Pre-call kinds raise before the engine is touched; post-call kinds
+fire after the engine call returns, which is exactly when real device
+faults surface (the round already mutated session state — recovery
+must hard-evict and replay, see scheduler._recover).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Tuple
+
+FAULT_KINDS = ("pool_exhausted", "oom", "kernel_dispatch", "nan_logits",
+               "slow_round")
+# Kinds injected BEFORE the engine call (session state untouched →
+# suspend-capable displacement); the rest fire after it returns.
+PRE_CALL_KINDS = ("pool_exhausted", "oom")
+
+
+class InjectedFault(RuntimeError):
+    """A fault raised by the injection harness.  ``kind`` names the
+    fault class, ``uid`` attributes it to the request whose draw fired
+    (bounding its retries), ``phase`` ("pre"/"post") tells recovery
+    whether the engine call ran — post-phase faults leave session
+    ``pending``/position state advanced, so the victims must be
+    hard-evicted and replayed rather than suspended."""
+
+    def __init__(self, kind: str, uid=None, phase: str = "pre"):
+        super().__init__(f"injected fault: {kind} (uid={uid})")
+        self.kind = kind
+        self.uid = uid
+        self.phase = phase
+
+
+def _draw(seed: int, kind: str, uid, block: int, attempt: int) -> float:
+    """Uniform in [0, 1), keyed by the full injection coordinate."""
+    h = hashlib.blake2b(f"{seed}:{kind}:{uid}:{block}:{attempt}".encode(),
+                       digest_size=8).digest()
+    return int.from_bytes(h, "big") / 2.0 ** 64
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-kind injection rates (probability per advancing request per
+    round).  ``slow_ms`` is the stall injected for ``slow_round`` (set
+    it above the server's ``round_timeout_ms`` so the watchdog trips).
+    ``only_uids`` restricts injection to specific requests — targeted
+    chaos for quarantine/ladder tests."""
+
+    seed: int = 0
+    pool_exhausted: float = 0.0
+    oom: float = 0.0
+    kernel_dispatch: float = 0.0
+    nan_logits: float = 0.0
+    slow_round: float = 0.0
+    slow_ms: float = 100.0
+    only_uids: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        for kind in FAULT_KINDS:
+            rate = getattr(self, kind)
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"{kind} rate {rate} outside [0, 1]")
+        if self.slow_ms < 0:
+            raise ValueError(f"slow_ms must be >= 0, got {self.slow_ms}")
+
+    @classmethod
+    def uniform(cls, rate: float, seed: int = 0, **kw) -> "FaultPlan":
+        """Every fault kind at the same rate."""
+        return cls(seed=seed, **{k: rate for k in FAULT_KINDS}, **kw)
+
+    def fires(self, kind: str, uid, block: int, attempt: int = 0) -> bool:
+        """Deterministic: does ``kind`` fire for (uid, block, attempt)?"""
+        rate = getattr(self, kind)
+        if rate <= 0.0:
+            return False
+        if self.only_uids is not None and uid not in self.only_uids:
+            return False
+        return _draw(self.seed, kind, uid, block, attempt) < rate
+
+    def any_rate(self) -> float:
+        return max(getattr(self, k) for k in FAULT_KINDS)
+
+
+def poison_outcome(out, vocab: int, uid: int):
+    """Deterministically corrupt a ``BlockOutcome`` the way NaN/Inf
+    logits corrupt a real round: the race argmax over a NaN-poisoned
+    score row emits garbage lane/token ids, and downstream counters
+    inherit the garbage.  Varies the corruption by uid so the guard's
+    range, finiteness, and consistency checks all get exercised."""
+    from repro.specdec.engine import BlockOutcome
+    toks = list(out.new_tokens)
+    acc = int(out.accepted)
+    v = 1024 if vocab is None else int(vocab)
+    mode = uid % 3
+    if mode == 0:
+        acc = v + len(toks)                # accepted count corrupted
+    elif mode == 1:
+        toks[-1] = v + 13                  # token id past the vocab
+    else:
+        toks[0] = -1                       # negative token id
+    return BlockOutcome(new_tokens=toks, accepted=acc,
+                        verify_syncs=out.verify_syncs, active=out.active)

@@ -1,0 +1,180 @@
+"""Round guards, watchdogs, and typed serving errors (DESIGN.md §13).
+
+The serving loop's correctness story is bit-identity: every execution
+mode replays the same (uid, blocks)-keyed randomness, so any divergence
+is corruption, not noise.  That makes guarding cheap and sharp — a
+round's packed fetch either satisfies a short list of exact invariants
+or the round is discarded and replayed:
+
+  * token ids in ``[0, vocab)`` and finite,
+  * ``0 <= accepted <= L`` with ``len(new_tokens) == accepted + 1``,
+  * ``accepted > 0`` implies some draft row is active (the rollback
+    invariant the engines already assert).
+
+``GuardViolation`` subclasses ``AssertionError`` deliberately: the
+engines' pre-existing invariant assertions and the guard's checks are
+the same class of failure (state corruption detected before tokens
+stream out), and callers that matched ``AssertionError`` keep working.
+The scheduler treats a violation as a poisoning fault — device KV may
+hold NaN/Inf garbage, which unlike finite garbage is NOT masked out of
+attention reads (0 * NaN = NaN), so recovery scrubs the arenas before
+replaying (``CachePool.scrub``).
+
+``RoundWatchdog`` is a soft wall-clock watchdog: a daemon timer flips
+``tripped`` while the blocking engine call runs, and the scheduler
+raises ``WatchdogTimeout`` AFTER the call returns.  Soft on purpose —
+the round's results are valid (just late), so a caller past its retry
+budget can accept them instead of livelocking on a genuinely slow
+machine (``ServerMetrics.watchdog_accepts``).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+class InvalidRequest(ValueError):
+    """A malformed ``submit()``: rejected at the API boundary instead of
+    surfacing as a cryptic device-side failure rounds later."""
+
+
+class GuardViolation(AssertionError):
+    """A round produced an outcome violating a serving invariant."""
+
+    kind = "guard"
+    phase = "post"
+
+    def __init__(self, msg: str, uid=None):
+        super().__init__(msg)
+        self.uid = uid
+
+
+class WatchdogTimeout(RuntimeError):
+    """A round overran the per-round wall-clock budget."""
+
+    kind = "watchdog"
+    phase = "post"
+
+    def __init__(self, msg: str, uid=None):
+        super().__init__(msg)
+        self.uid = uid
+
+
+def validate_prompt(prompt, max_new, vocab: Optional[int]) -> np.ndarray:
+    """Validate a ``submit()`` payload; returns the prompt as i32.
+    Raises ``InvalidRequest`` on empty prompts, non-integer dtypes,
+    ``max_new < 1``, or out-of-vocab token ids."""
+    arr = np.asarray(prompt)
+    if arr.ndim != 1:
+        raise InvalidRequest(
+            f"prompt must be a 1-D token sequence, got shape {arr.shape}")
+    if arr.size == 0:
+        raise InvalidRequest("prompt must contain at least one token")
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise InvalidRequest(
+            f"prompt must have an integer dtype, got {arr.dtype}")
+    if not isinstance(max_new, (int, np.integer)) or max_new < 1:
+        raise InvalidRequest(f"max_new must be an int >= 1, got {max_new!r}")
+    if vocab is not None and arr.size:
+        lo, hi = int(arr.min()), int(arr.max())
+        if lo < 0 or hi >= vocab:
+            raise InvalidRequest(
+                f"prompt token ids must lie in [0, {vocab}), got "
+                f"range [{lo}, {hi}]")
+    return arr.astype(np.int32)
+
+
+def _finite_in_vocab(tokens: np.ndarray, vocab: Optional[int], what: str,
+                     uid) -> None:
+    if tokens.size == 0:
+        return
+    if np.issubdtype(tokens.dtype, np.floating):
+        if not np.all(np.isfinite(tokens)):
+            raise GuardViolation(
+                f"{what}: non-finite token values (NaN/Inf-poisoned "
+                "logits reached the fetch)", uid=uid)
+        tokens = tokens.astype(np.int64)
+    lo, hi = int(tokens.min()), int(tokens.max())
+    # vocab None: engine exposes no vocab size — negative ids are still
+    # always corrupt, the upper bound is simply unknowable.
+    if lo < 0 or (vocab is not None and hi >= vocab):
+        raise GuardViolation(
+            f"{what}: token ids outside [0, {vocab}) "
+            f"(range [{lo}, {hi}])", uid=uid)
+
+
+def validate_outcome(out, uid, vocab: Optional[int],
+                     draft_len: int) -> None:
+    """Validate one ``BlockOutcome`` against the serving invariants.
+    The scheduler runs this on every guarded round before any token
+    streams out (``on_token`` fires at commit — a poisoned round must
+    die before commit, not after)."""
+    acc = int(out.accepted)
+    if not 0 <= acc <= draft_len:
+        raise GuardViolation(
+            f"uid {uid}: accepted={acc} outside [0, {draft_len}]", uid=uid)
+    if len(out.new_tokens) != acc + 1:
+        raise GuardViolation(
+            f"uid {uid}: {len(out.new_tokens)} tokens for accepted={acc} "
+            "(must be accepted + 1)", uid=uid)
+    _finite_in_vocab(np.asarray(out.new_tokens), vocab,
+                     f"uid {uid}", uid=uid)
+    if acc > 0 and out.active is not None \
+            and not np.asarray(out.active).any():
+        raise GuardViolation(
+            f"rollback invariant violated: num_accepted={acc} "
+            "but no draft row is active", uid=uid)
+
+
+def check_packed(host: dict, slot_uids: Sequence, vocab: Optional[int],
+                 draft_len: int) -> None:
+    """Validate a fused round's raw packed fetch, per advancing session.
+    ``slot_uids``: (uid, slot) pairs.  Runs on every fused round (guard
+    enabled or not) — it subsumes the engine's former inline rollback-
+    invariant assertion and catches device-side corruption (a NaN logit
+    row makes the race argmax emit garbage lane/token ids) before the
+    engine converts the fetch into per-request outcomes."""
+    accepted = np.asarray(host["accepted"])
+    tokens = np.asarray(host["tokens"])
+    active = np.asarray(host["active"])
+    for uid, slot in slot_uids:
+        acc = int(accepted[slot])
+        if not 0 <= acc <= draft_len:
+            raise GuardViolation(
+                f"uid {uid}: packed accepted={acc} outside "
+                f"[0, {draft_len}]", uid=uid)
+        _finite_in_vocab(tokens[slot][:acc + 1], vocab,
+                         f"uid {uid}: packed fetch", uid=uid)
+        if acc > 0 and not active[slot].any():
+            raise GuardViolation(
+                f"rollback invariant violated: num_accepted={acc} "
+                "but no draft row is active", uid=uid)
+
+
+class RoundWatchdog:
+    """Soft per-round wall-clock watchdog (module docstring).  Use as a
+    context manager around the blocking engine call; check ``tripped``
+    after the block."""
+
+    def __init__(self, timeout_ms: Optional[float]):
+        self.timeout_ms = timeout_ms
+        self.tripped = False
+        self._timer: Optional[threading.Timer] = None
+
+    def _fire(self) -> None:
+        self.tripped = True
+
+    def __enter__(self) -> "RoundWatchdog":
+        if self.timeout_ms:
+            self._timer = threading.Timer(self.timeout_ms / 1e3, self._fire)
+            self._timer.daemon = True
+            self._timer.start()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        if self._timer is not None:
+            self._timer.cancel()
+        return False

@@ -190,6 +190,13 @@ class SpecDecEngine:
         # per draft step per block/round; DESIGN.md §7.3 accounting).
         self.num_draft_syncs = 0
 
+    def set_verifier_backend(self, backend: str) -> None:
+        """Degradation-ladder rung (scheduler fault recovery, DESIGN.md
+        §13): swap the block-verification backend in place.  Token-
+        invisible — the backends are exact-equality oracles of one
+        another (tests/test_block_verify.py)."""
+        self.cfg = dataclasses.replace(self.cfg, verifier_backend=backend)
+
     # -- jitted, shape-stable model calls ---------------------------------
     def _buffer_forward(self, params, mcfg: ModelConfig, tokens: jax.Array):
         return _jitted_buffer_forward(mcfg)(params, tokens)

@@ -91,6 +91,7 @@ from repro.models import (
     verify_step_slots_paged,
 )
 from repro.models import paged as paged_kv
+from repro.serving.guard import check_packed
 from repro.specdec import verify as V
 from repro.specdec.block_verify import (
     RS_STRATEGIES,
@@ -430,6 +431,52 @@ class CachedSpecDecEngine:
         """Demote a suspended request to hard-evicted: forfeit its
         pages (it re-admits via re-prefill like any evicted request)."""
         self.pool.release_handle(handle)
+
+    # -- fault recovery + degradation ladder (DESIGN.md §13) ---------------
+    def discard_round_state(self, scrub: bool = False) -> None:
+        """Drop every piece of round-scoped device state after a
+        guarded fault, leaving the pool in the host-authoritative state
+        a fresh admission wave expects: the fused view (which may hold
+        an aborted round's in-flight arenas) and the lazily-mirrored
+        device positions/page table.  Callers displace every session
+        first — the scheduler evicts or suspends all live requests
+        before discarding, so nothing references the dropped state.
+
+        ``scrub=True`` additionally zeroes the KV storage itself — the
+        NaN-poisoning recovery.  Finite garbage in dead regions is
+        masked out of every attention read, but NaN garbage is not
+        (``0 * NaN = NaN`` in the masked weight sum), so arenas that
+        may hold poisoned bytes are rebuilt rather than reused."""
+        assert not self._sessions, \
+            "discard_round_state with live sessions; displace them first"
+        self._fused_view = None
+        self._view_dirty.clear()
+        if self.pool is not None:
+            self.pool.drop_device_mirrors()
+            if scrub:
+                self.pool.scrub()
+
+    def set_verifier_backend(self, backend: str) -> None:
+        """Degradation-ladder rung: swap the block-verification backend
+        in place (pallas -> xla in practice).  Token-invisible — the
+        backends are exact-equality oracles of one another
+        (tests/test_block_verify.py asserts array_equal across them).
+        The fused round program closes over the config, so it rebuilds
+        lazily on the next round."""
+        if backend == self.cfg.verifier_backend:
+            return
+        self.cfg = dataclasses.replace(self.cfg, verifier_backend=backend)
+        self._fused_round = None
+
+    def dequantize_verify(self) -> None:
+        """Degradation-ladder rung quant -> f32: swap the W8A8 verify
+        weights back to the f32 tree.  The KV arenas keep their int8
+        STORAGE format (rebuilding the pool mid-serve would drop every
+        live session); only the verify matmuls change precision.  Note
+        this rung is acceptance-equivalent, not bit-identical — the
+        chaos bit-identity gate runs unquantized configs."""
+        self._t_verify_params = self.t_params
+        self._verify_dequantized = True
 
     def page_state(self) -> Optional[dict]:
         """{free, total, fixed} physical-page accounting, or None when
@@ -965,15 +1012,17 @@ class CachedSpecDecEngine:
 
         host = jax.device_get(packed)          # the round's ONE transfer
         pool.refresh_pos_host(host["pos"], [s.slot for s in sessions])
+        # Guard the raw fetch (DESIGN.md §13): token range/finiteness,
+        # accepted bounds, and the rollback invariant — a NaN-poisoned
+        # logit row makes the race argmax emit garbage ids, and this is
+        # the last point before that garbage becomes session state.
+        check_packed(host, [(s.uid, s.slot) for s in sessions],
+                     vocab=self.vocab, draft_len=L)
         outs = []
         for i, sess in enumerate(sessions):
             s = sess.slot
             acc = int(host["accepted"][s])
             active = np.asarray(host["active"][s])
-            if acc > 0 and not active.any():
-                raise AssertionError(
-                    f"rollback invariant violated: num_accepted={acc} "
-                    "but no draft row is active")
             toks = [int(t) for t in host["tokens"][s][:acc + 1]]
             sess.pending = toks[-1]
             # The packed fetch is one transfer for the WHOLE round;

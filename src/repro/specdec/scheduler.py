@@ -65,6 +65,21 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from repro.models.cache_pool import PagePoolExhausted
+from repro.serving.faults import (
+    FAULT_KINDS,
+    FaultPlan,
+    InjectedFault,
+    poison_outcome,
+)
+from repro.serving.guard import (
+    GuardViolation,
+    InvalidRequest,
+    RoundWatchdog,
+    WatchdogTimeout,
+    validate_outcome,
+    validate_prompt,
+)
 from repro.specdec.engine import SpecDecConfig, SpecDecEngine
 
 
@@ -103,6 +118,13 @@ class Request:
     # pressure may strip the handle (``drop_handle``), demoting it to
     # an ordinary evicted request that re-prefills on re-admission.
     _kv_handle: Optional[dict] = None
+    # Fault accounting (DESIGN.md §13): ``retries`` counts rounds this
+    # request was displaced from by an ATTRIBUTED fault — a separate
+    # counter from ``evictions`` so fault replay never perturbs the v2
+    # admission rank.  Past the retry budget the request quarantines:
+    # ``error`` is set and it moves to ``server.failed``.
+    retries: int = 0
+    error: Optional[str] = None
 
     @property
     def done(self) -> bool:
@@ -152,6 +174,21 @@ class ServerMetrics:
     # directly (``run()`` previously set it; direct ``step()`` callers
     # divided by the 1e-9 floor and reported nonsense).
     wall_s: float = 0.0
+    # Fault tolerance (DESIGN.md §13).  Every guarded fault increments
+    # exactly one ``faults[kind]`` entry AND ``retries`` (one discarded
+    # round each), so ``retries == faults_total`` is a consistency
+    # invariant the chaos bench gates on.
+    faults: dict = dataclasses.field(default_factory=dict)
+    retries: int = 0             # rounds discarded and replayed
+    quarantined: int = 0         # requests failed past the retry budget
+    watchdog_trips: int = 0      # rounds that overran the timeout
+    watchdog_accepts: int = 0    # slow-but-valid rounds kept (anti-livelock)
+    callback_errors: int = 0     # on_token callbacks that raised
+    degradations: list = dataclasses.field(default_factory=list)
+
+    @property
+    def faults_total(self) -> int:
+        return sum(self.faults.values())
 
     @property
     def tokens_per_s(self) -> float:
@@ -224,7 +261,11 @@ class SpecDecServer:
                  batched: bool = False, cache_mode: str = "reprefill",
                  admission: str = "bucketed", policy: str = "fifo",
                  preempt_tokens: Optional[int] = None,
-                 min_buf_len: int = 0):
+                 min_buf_len: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 retry_budget: Optional[int] = None,
+                 round_timeout_ms: Optional[float] = None,
+                 degrade_after: Optional[int] = None):
         if cache_mode not in CACHE_MODES:
             raise ValueError(f"unknown cache_mode {cache_mode!r}")
         if admission not in ADMISSION_MODES:
@@ -260,17 +301,44 @@ class SpecDecServer:
         self._uid = 0
         self._buf_len = max(0, int(min_buf_len))
         self.metrics = ServerMetrics()
+        # Fault tolerance (DESIGN.md §13).  ``guarded`` turns on round
+        # recovery; it is implied by passing ANY fault-layer knob, so a
+        # server with none of them behaves byte-for-byte like before
+        # (faults propagate, the fifo page-exhaustion test stays loud).
+        if retry_budget is not None and retry_budget < 0:
+            raise ValueError("retry_budget must be >= 0")
+        if round_timeout_ms is not None and round_timeout_ms <= 0:
+            raise ValueError("round_timeout_ms must be > 0")
+        if degrade_after is not None and degrade_after < 1:
+            raise ValueError("degrade_after must be >= 1")
+        self.fault_plan = fault_plan
+        self.guarded = (fault_plan is not None or retry_budget is not None
+                        or round_timeout_ms is not None
+                        or degrade_after is not None)
+        self.retry_budget = 2 if retry_budget is None else int(retry_budget)
+        self.round_timeout_ms = round_timeout_ms
+        self.degrade_after = degrade_after
+        # Requests that FAILED (quarantine, callback error) — disjoint
+        # from the completed list ``run()`` returns.
+        self.failed: list = []
+        self._consec_faults = 0
+        self._consec_wd = 0
 
     def submit(self, prompt: np.ndarray, max_new: int = 32, *,
                priority: int = 0, on_token: Optional[Callable] = None) -> int:
         """Queue a request.  ``priority`` orders v2 admission (ignored
         under fifo); ``on_token(uid, token)`` is called once per emitted
         token, at the round commit that produced it, in emission
-        order."""
+        order.  Malformed inputs (empty prompt, non-integer dtype,
+        out-of-vocab ids, ``max_new < 1``) raise ``InvalidRequest``
+        HERE, at the API boundary, instead of surfacing as a cryptic
+        device-side failure rounds later."""
+        prompt = validate_prompt(prompt, max_new,
+                                 getattr(self.engine, "vocab", None))
         self._uid += 1
-        req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      max_new=max_new, priority=priority, on_token=on_token,
-                      t_submit=time.time())
+        req = Request(uid=self._uid, prompt=prompt,
+                      max_new=int(max_new), priority=priority,
+                      on_token=on_token, t_submit=time.time())
         self.queue.append(req)
         return req.uid
 
@@ -433,6 +501,21 @@ class SpecDecServer:
     def _required_buf(self, req: Request) -> int:
         return len(req.prompt) + req.max_new + self.engine.cfg.draft_len + 2
 
+    # Faults the guarded scheduler recovers from; anything else stays
+    # loud.  GuardViolation subclasses AssertionError, but a PLAIN
+    # AssertionError (an engine contract bug) is never recoverable.
+    _RECOVERABLE = (InjectedFault, PagePoolExhausted, GuardViolation,
+                    WatchdogTimeout, MemoryError)
+
+    def _is_recoverable(self, e: BaseException) -> bool:
+        if isinstance(e, self._RECOVERABLE):
+            return True
+        # Real allocator failures surface as XLA RESOURCE_EXHAUSTED.
+        return isinstance(e, RuntimeError) and "RESOURCE_EXHAUSTED" in str(e)
+
+    def _vocab(self) -> Optional[int]:
+        return getattr(self.engine, "vocab", None)
+
     def step(self, key: jax.Array) -> list:
         """Advance every live request by one speculative block.  Returns
         requests that finished this round.
@@ -443,24 +526,54 @@ class SpecDecServer:
         tokens next step.  Round-alignment differences between modes
         are token-invisible because per-request randomness depends only
         on (uid, blocks) — callers comparing admission policies must
-        pass the same ``key`` every step, as ``run()`` does."""
+        pass the same ``key`` every step, as ``run()`` does.
+
+        On a guarded server (DESIGN.md §13) a recoverable fault makes
+        the step return [] after displacing the round's requests; the
+        next step replays them bit-identically — ``blocks`` only
+        advances at commit, so the re-derived (uid, blocks) stream is
+        the same sheet the discarded round drew."""
         t0 = time.perf_counter()
-        newly = self._admit()
-        if not self.live:
-            return []
-        self._buf_len = max([self._buf_len]
-                            + [self._required_buf(r) for r in self.live])
-        overlap = (self.cache_mode == "kv_fused"
-                   and self.admission == "bucketed")
-        new_ids = {id(r) for r in newly}
-        advancing = [r for r in self.live if id(r) not in new_ids] \
-            if overlap else self.live
-        # Nested folds: a flat uid * C + blocks encoding collides across
-        # requests once blocks reaches C (see module docstring).
-        subs = [jax.random.fold_in(jax.random.fold_in(key, r.uid), r.blocks)
-                for r in advancing]
-        fw0 = self.engine.num_target_forwards
-        ds0 = getattr(self.engine, "num_draft_syncs", 0)
+        try:
+            newly = self._admit()
+            if not self.live:
+                return []
+            self._buf_len = max([self._buf_len]
+                                + [self._required_buf(r)
+                                   for r in self.live])
+            overlap = (self.cache_mode == "kv_fused"
+                       and self.admission == "bucketed")
+            new_ids = {id(r) for r in newly}
+            advancing = [r for r in self.live if id(r) not in new_ids] \
+                if overlap else self.live
+            # Nested folds: a flat uid * C + blocks encoding collides
+            # across requests once blocks reaches C (module docstring).
+            subs = [jax.random.fold_in(jax.random.fold_in(key, r.uid),
+                                       r.blocks)
+                    for r in advancing]
+            fw0 = self.engine.num_target_forwards
+            ds0 = getattr(self.engine, "num_draft_syncs", 0)
+            try:
+                outs = self._dispatch(subs, advancing, newly, overlap)
+            except Exception as fault:
+                if not (self.guarded and self._is_recoverable(fault)):
+                    raise
+                self._recover(fault, newly)
+                return []
+            if advancing:
+                self.metrics.rounds += 1
+            self.metrics.target_forwards += \
+                self.engine.num_target_forwards - fw0
+            self.metrics.draft_syncs += (
+                getattr(self.engine, "num_draft_syncs", 0) - ds0)
+            finished = self._commit(advancing, outs)
+            self._consec_faults = 0
+            return finished
+        finally:
+            self.metrics.wall_s += time.perf_counter() - t0
+
+    def _engine_round(self, subs, advancing, newly, overlap) -> list:
+        """One engine round — the three execution branches."""
         if overlap:
             # The overlap path skips full-prefix assembly (the engine
             # serves from cached state) but still hands over each
@@ -472,34 +585,111 @@ class SpecDecServer:
             # (evicted) request re-prefills everything it has emitted
             # so far, rebuilding KV bitwise equal to the state it lost.
             # For fresh requests output is empty and this is the prompt.
-            outs = self.engine.round_with_admission(
+            return self.engine.round_with_admission(
                 subs, [r.uid for r in advancing],
                 [(r.uid, np.concatenate([r.prompt,
                                          np.asarray(r.output, np.int32)]))
                  for r in newly], self._buf_len,
                 tails=tails)
-        else:
-            prefixes = [np.concatenate([r.prompt,
-                                        np.asarray(r.output, np.int32)])
-                        for r in advancing]
-            if self.cache_mode in ("kv", "kv_fused"):
-                outs = self.engine.gen_blocks(
-                    subs, prefixes, self._buf_len,
-                    uids=[r.uid for r in advancing],
-                    fused=self.cache_mode == "kv_fused",
-                    admission=self.admission)
-            elif self.batched:
-                outs = self.engine.gen_blocks(subs, prefixes, self._buf_len)
-            else:
-                outs = [self.engine.gen_block(sub, prefix, self._buf_len)
-                        for sub, prefix in zip(subs, prefixes)]
-        if advancing:
-            self.metrics.rounds += 1
-        self.metrics.target_forwards += self.engine.num_target_forwards - fw0
-        self.metrics.draft_syncs += (
-            getattr(self.engine, "num_draft_syncs", 0) - ds0)
+        prefixes = [np.concatenate([r.prompt,
+                                    np.asarray(r.output, np.int32)])
+                    for r in advancing]
+        if self.cache_mode in ("kv", "kv_fused"):
+            return self.engine.gen_blocks(
+                subs, prefixes, self._buf_len,
+                uids=[r.uid for r in advancing],
+                fused=self.cache_mode == "kv_fused",
+                admission=self.admission)
+        if self.batched:
+            return self.engine.gen_blocks(subs, prefixes, self._buf_len)
+        return [self.engine.gen_block(sub, prefix, self._buf_len)
+                for sub, prefix in zip(subs, prefixes)]
 
-        finished = []
+    def _dispatch(self, subs, advancing, newly, overlap) -> list:
+        """Run one engine round under the fault layer (DESIGN.md §13):
+        pre-call injections fire before the engine is touched, the
+        watchdog times the blocking call, post-call injections and the
+        outcome guard run on the results.  Injection draws are keyed by
+        (kind, uid, blocks, retries) — fully deterministic, and a
+        replay re-draws at the same rate because the attributed
+        request's retry counter advanced."""
+        plan = self.fault_plan
+        post = []
+        if plan is not None:
+            for req in advancing:
+                for kind in FAULT_KINDS:
+                    if not plan.fires(kind, req.uid, req.blocks,
+                                      req.retries):
+                        continue
+                    if kind in ("pool_exhausted", "oom"):
+                        # Pre-call: the engine never runs, session
+                        # state stays clean (suspend-capable recovery).
+                        raise InjectedFault(kind, uid=req.uid, phase="pre")
+                    post.append((kind, req))
+        wd = RoundWatchdog(self.round_timeout_ms)
+        with wd:
+            outs = self._engine_round(subs, advancing, newly, overlap)
+            for kind, req in post:
+                if kind == "slow_round":
+                    time.sleep(plan.slow_ms / 1e3)
+        # The valve only engages on rounds that ADVANCE requests: an
+        # admission-only round (overlap mode right after displacement)
+        # must neither raise — discarding it re-does the same prefill —
+        # nor reset the consecutive-trip counter, which would starve
+        # the advancing rounds of ever reaching the accept valve.
+        if wd.tripped and advancing:
+            self.metrics.watchdog_trips += 1
+            self._consec_wd += 1
+            if self._consec_wd > max(1, self.retry_budget):
+                # Anti-livelock valve: the round's results are VALID,
+                # just late.  On a genuinely slow machine, discarding
+                # forever would wedge the drain loop — accept the slow
+                # round instead and record that we did.
+                self.metrics.watchdog_accepts += 1
+                self._consec_wd = 0
+            else:
+                slow = next((r for k, r in post if k == "slow_round"),
+                            None)
+                if slow is not None:
+                    raise InjectedFault("slow_round", uid=slow.uid,
+                                        phase="post")
+                raise WatchdogTimeout(
+                    f"round exceeded {self.round_timeout_ms}ms")
+        elif advancing:
+            self._consec_wd = 0
+        for kind, req in post:
+            if kind == "kernel_dispatch":
+                raise InjectedFault(kind, uid=req.uid, phase="post")
+        poisoned_uids = set()
+        if post:
+            idx = {id(r): i for i, r in enumerate(advancing)}
+            for kind, req in post:
+                if kind == "nan_logits":
+                    outs[idx[id(req)]] = poison_outcome(
+                        outs[idx[id(req)]], self._vocab(), req.uid)
+                    poisoned_uids.add(req.uid)
+        if self.guarded:
+            lr = self.engine.cfg.draft_len
+            for req, out in zip(advancing, outs):
+                try:
+                    validate_outcome(out, req.uid, self._vocab(), lr)
+                except GuardViolation:
+                    if req.uid not in poisoned_uids:
+                        raise
+                    # The guard caught OUR injection: attribute it to
+                    # the injected class (recovery scrubs either way —
+                    # both are poisoning kinds), so the fault counters
+                    # separate injected NaN rounds from genuine
+                    # corruption ("guard").
+                    raise InjectedFault("nan_logits", uid=req.uid,
+                                        phase="post")
+        return outs
+
+    def _commit(self, advancing, outs) -> list:
+        """Commit a validated round: emit tokens (streaming callbacks
+        fire here), retire finished requests, isolate callback
+        failures."""
+        finished, cb_failed = [], []
         t_commit = time.time()
         for req, out in zip(advancing, outs):
             # Emit only up to max_new: the block may overshoot on its
@@ -508,6 +698,12 @@ class SpecDecServer:
             emit = list(out.new_tokens)[:req.max_new - len(req.output)]
             req.output.extend(emit)
             req.blocks += 1
+            # A committed round is progress: quarantine is for
+            # PERSISTENT failure, so the budget counts CONSECUTIVE
+            # attributed faults, not lifetime ones — a long request
+            # under steady background chaos must not accumulate its
+            # way into quarantine.
+            req.retries = 0
             req.accepted += out.accepted
             req.tokens_since_admit += len(emit)
             self.metrics.host_syncs += out.verify_syncs
@@ -516,10 +712,26 @@ class SpecDecServer:
             for tok in emit:
                 req.token_times.append(t_commit)
                 if req.on_token is not None:
-                    req.on_token(req.uid, int(tok))
-            if req.done:
+                    try:
+                        req.on_token(req.uid, int(tok))
+                    except Exception as e:
+                        # User callback code: a raising callback fails
+                        # only ITS request — never the drain loop.
+                        req.on_token = None
+                        req.error = f"on_token callback raised: {e!r}"
+                        cb_failed.append(req)
+                        self.metrics.callback_errors += 1
+            if req.error is None and req.done:
                 req.t_done = t_commit
                 finished.append(req)
+        for req in cb_failed:
+            # The failed request's slot (and pages) release; committed
+            # tokens stay on the record for the postmortem.
+            self.live.remove(req)
+            if hasattr(self.engine, "has_session") \
+                    and self.engine.has_session(req.uid):
+                self.engine.release(req.uid)
+            self.failed.append(req)
         for req in finished:
             self.live.remove(req)
             if self.cache_mode in ("kv", "kv_fused"):
@@ -527,8 +739,160 @@ class SpecDecServer:
             self.metrics.completed += 1
             self.metrics.total_tokens += len(req.output)
             self.metrics.total_blocks += req.blocks
-        self.metrics.wall_s += time.perf_counter() - t0
         return finished
+
+    # ---- fault recovery (DESIGN.md §13) ------------------------------
+
+    def _recover(self, fault, newly) -> None:
+        """Guarded-fault recovery: displace every request the round
+        touched, discard round-scoped device state, attribute the
+        fault, and (optionally) step the degradation ladder.  Replay is
+        exact for free: per-request randomness is (uid, blocks)-keyed
+        and ``blocks`` only advances at commit, so the re-executed
+        round draws the very sheet the discarded round drew, and
+        re-prefilled KV is bitwise equal to the decode-built KV it
+        replaces."""
+        now = time.time()
+        kind = getattr(fault, "kind", None)
+        if kind is None:
+            kind = "pool_exhausted" \
+                if isinstance(fault, PagePoolExhausted) else "oom"
+        phase = getattr(fault, "phase",
+                        "pre" if isinstance(fault, PagePoolExhausted)
+                        else "post")
+        poisoned = kind in ("nan_logits", "guard")
+        uid = getattr(fault, "uid", None)
+        self.metrics.faults[kind] = self.metrics.faults.get(kind, 0) + 1
+        self.metrics.retries += 1
+        self._consec_faults += 1
+
+        # Displace everyone.  Post-phase faults advanced session state
+        # (pending / device positions) past what the host committed, so
+        # those sessions hard-evict and replay from prompt+output;
+        # pre-phase faults left sessions clean, so a paged v2 engine
+        # SUSPENDS instead (pages stay resident — this is how a real
+        # ``PagePoolExhausted`` converts into displacement: suspend the
+        # holders, let v2 admission strip handles under pressure, hard-
+        # evict last).  Poisoned rounds always hard-evict — suspended
+        # pages would keep possibly-NaN bytes alive across the scrub.
+        can_suspend = (self.policy == "v2" and not poisoned
+                       and phase == "pre"
+                       and getattr(self.engine, "can_suspend",
+                                   lambda: False)())
+        new_ids = {id(r) for r in newly}
+        displaced = list(self.live)
+        self.live.clear()
+        for req in displaced:
+            if hasattr(self.engine, "has_session") \
+                    and self.engine.has_session(req.uid):
+                if can_suspend and id(req) not in new_ids:
+                    req._kv_handle = self.engine.suspend(req.uid)
+                else:
+                    self.engine.evict(req.uid)
+            req._t_evict = now
+        # Requeue at the FRONT in original order; ``evictions`` stays
+        # untouched — fault displacement is not a policy rotation, and
+        # bumping it would perturb the v2 admission rank (and with it
+        # the token-invisible replay schedule).
+        self.queue.extendleft(reversed(displaced))
+        if poisoned:
+            # The scrub rebuilds KV storage; a suspended handle's
+            # detached pages may hold poisoned bytes, so forfeit them
+            # first (the holders re-prefill — exact, by the same
+            # bit-identity argument as eviction).
+            for q in self.queue:
+                if q._kv_handle is not None:
+                    self.engine.drop_handle(q._kv_handle)
+                    q._kv_handle = None
+        if hasattr(self.engine, "discard_round_state"):
+            self.engine.discard_round_state(scrub=poisoned)
+
+        if uid is not None:
+            req = next((r for r in displaced if r.uid == uid), None)
+            if req is not None:
+                req.retries += 1
+                if req.retries > self.retry_budget:
+                    self._quarantine(
+                        req, f"retry budget ({self.retry_budget}) "
+                             f"exhausted by repeated {kind} faults")
+        stepped = False
+        if self.degrade_after \
+                and self._consec_faults >= self.degrade_after:
+            stepped = self._degrade()
+            if stepped:
+                self._consec_faults = 0
+        if not stepped and uid is None \
+                and self._consec_faults > max(1, self.retry_budget):
+            # An unattributed fault recurring with no ladder rung left:
+            # re-raise rather than retry forever.
+            raise fault
+
+    def _quarantine(self, req: Request, reason: str) -> None:
+        """Permanently fail a request: out of the queue, suspend handle
+        forfeited, error recorded.  Its engine session is already gone
+        (recovery displaced it before attribution)."""
+        if req in self.queue:
+            self.queue.remove(req)
+        if req._kv_handle is not None:
+            self.engine.drop_handle(req._kv_handle)
+            req._kv_handle = None
+        req.error = f"quarantined: {reason}"
+        self.failed.append(req)
+        self.metrics.quarantined += 1
+
+    def _ladder_next(self) -> Optional[str]:
+        """The next degradation rung, or None at the bottom.  Rungs
+        step from the most-optimized execution mode toward the
+        stateless reference, and every rung except dequant is
+        bit-identical (DESIGN.md §13):
+
+          pallas verifier -> xla   (exact-equality oracles)
+          quant verify -> f32      (acceptance-equivalent)
+          kv_fused -> kv           (same tokens, host-driven round)
+          kv -> reprefill          (same tokens, stateless reference)
+        """
+        cfg = getattr(self.engine, "cfg", None)
+        if cfg is not None and cfg.verifier_backend == "pallas" \
+                and hasattr(self.engine, "set_verifier_backend"):
+            return "verifier:pallas->xla"
+        if cfg is not None and getattr(cfg, "quant", False) \
+                and hasattr(self.engine, "dequantize_verify") \
+                and not getattr(self.engine, "_verify_dequantized", False):
+            return "verify:quant->f32"
+        if self.cache_mode == "kv_fused":
+            return "cache:kv_fused->kv"
+        if self.cache_mode == "kv":
+            return "cache:kv->reprefill"
+        return None
+
+    def _degrade(self) -> bool:
+        """Step one rung down the degradation ladder; returns whether a
+        step was taken.  Transitions are sticky (the ladder never
+        climbs back mid-serve — a flapping mode would re-trigger
+        whatever broke the faster one) and recorded in
+        ``metrics.degradations``."""
+        step = self._ladder_next()
+        if step is None:
+            return False
+        if step == "verifier:pallas->xla":
+            self.engine.set_verifier_backend("xla")
+        elif step == "verify:quant->f32":
+            self.engine.dequantize_verify()
+        elif step == "cache:kv_fused->kv":
+            self.cache_mode = "kv"
+        else:  # cache:kv->reprefill
+            # The reference path is stateless: no sessions, no resume —
+            # strip any suspended handle (the holders re-prefill) and
+            # stack the reference rounds into batched forwards.
+            for q in self.queue:
+                if q._kv_handle is not None:
+                    self.engine.drop_handle(q._kv_handle)
+                    q._kv_handle = None
+            self.cache_mode = "reprefill"
+            self.batched = True
+        self.metrics.degradations.append(
+            {"round": self.metrics.rounds, "step": step})
+        return True
 
     def run(self, key: jax.Array) -> list:
         """Drain the queue; returns all completed requests in finish order.

@@ -1,0 +1,277 @@
+"""Fault-injected serving (DESIGN.md §13): deterministic injection,
+round guards, watchdogs, retry/replay bit-identity, quarantine, and
+the graceful-degradation ladder."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.models.cache_pool import PagePoolExhausted
+from repro.serving import FAULT_KINDS, FaultPlan, InvalidRequest
+from repro.specdec import CachedSpecDecEngine, SpecDecConfig, SpecDecEngine
+from repro.specdec.scheduler import SpecDecServer
+
+TCFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=48,
+                   num_heads=4, num_kv_heads=2, head_dim=12, d_ff=96,
+                   vocab_size=32, dtype="float32")
+DCFG = TCFG.replace(name="d", num_layers=1)
+SD = SpecDecConfig(num_drafts=2, draft_len=2, strategy="gls", top_k=0)
+
+PROMPTS = [np.arange(1, 1 + n, dtype=np.int32) % 31 + 1
+           for n in (3, 5, 4, 6)]
+MAX_NEW = 6
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return (init_params(jax.random.PRNGKey(0), TCFG),
+            init_params(jax.random.PRNGKey(1), DCFG))
+
+
+def _min_buf(sd=SD, prompts=PROMPTS, max_new=MAX_NEW):
+    return max(len(p) for p in prompts) + max_new + sd.draft_len + 2
+
+
+@pytest.fixture(scope="module")
+def oracle(pair):
+    """Fault-free sequential reprefill reference outputs, keyed by uid."""
+    tp, dp = pair
+    srv = SpecDecServer(SpecDecEngine((tp, TCFG), [(dp, DCFG)], SD),
+                        max_batch=2, cache_mode="reprefill",
+                        min_buf_len=_min_buf())
+    for p in PROMPTS:
+        srv.submit(p, max_new=MAX_NEW)
+    done = srv.run(KEY)
+    return {r.uid: list(r.output) for r in done}
+
+
+def _paged_server(pair, **kw):
+    tp, dp = pair
+    sdp = dataclasses.replace(SD, paged=True, page_size=8)
+    eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), sdp,
+                              pool_slots=2, pool_pages=24)
+    return eng, SpecDecServer(eng, max_batch=2, cache_mode="kv_fused",
+                              policy="v2", min_buf_len=_min_buf(), **kw)
+
+
+def _serve(srv):
+    for p in PROMPTS:
+        srv.submit(p, max_new=MAX_NEW)
+    done = srv.run(KEY)
+    return {r.uid: list(r.output) for r in done}
+
+
+# ---- fault plan ------------------------------------------------------
+
+
+def test_fault_plan_deterministic_keyed_draws():
+    """Same plan, same coordinates, same draws — wall clock and call
+    order never matter; the attempt index re-draws so a retry is not
+    doomed to refault."""
+    a = FaultPlan.uniform(0.3, seed=11)
+    b = FaultPlan.uniform(0.3, seed=11)
+    coords = [(k, uid, blk, att) for k in FAULT_KINDS
+              for uid in range(8) for blk in range(8) for att in range(3)]
+    draws = [a.fires(*c) for c in coords]
+    assert draws == [b.fires(*c) for c in coords]
+    assert any(draws) and not all(draws)
+    assert len({tuple(a.fires(k, uid, blk, att)
+                      for k, uid, blk, _ in coords[:64])
+                for att in range(4)}) > 1, "attempt index not in the key"
+    only = FaultPlan.uniform(1.0, only_uids=(3,))
+    assert only.fires("oom", 3, 0) and not only.fires("oom", 4, 0)
+    with pytest.raises(ValueError, match="rate"):
+        FaultPlan(nan_logits=1.5)
+
+
+# ---- submit validation (satellite: typed InvalidRequest) -------------
+
+
+def test_submit_rejects_malformed_requests(pair):
+    tp, dp = pair
+    srv = SpecDecServer(SpecDecEngine((tp, TCFG), [(dp, DCFG)], SD))
+    ok = np.array([1, 2, 3], np.int32)
+    with pytest.raises(InvalidRequest, match="at least one token"):
+        srv.submit(np.array([], np.int32), max_new=4)
+    with pytest.raises(InvalidRequest, match="1-D"):
+        srv.submit(np.ones((2, 2), np.int32), max_new=4)
+    with pytest.raises(InvalidRequest, match="integer dtype"):
+        srv.submit(np.array([1.5, 2.0]), max_new=4)
+    with pytest.raises(InvalidRequest, match="max_new"):
+        srv.submit(ok, max_new=0)
+    with pytest.raises(InvalidRequest, match=r"\[0, 32\)"):
+        srv.submit(np.array([1, 99], np.int32), max_new=4)
+    with pytest.raises(InvalidRequest, match=r"\[0, 32\)"):
+        srv.submit(np.array([-1, 3], np.int32), max_new=4)
+    assert not srv.queue, "rejected submits must not enqueue"
+    srv.submit(ok, max_new=4)
+    assert len(srv.queue) == 1
+
+
+# ---- on_token isolation (satellite: callback failure) ----------------
+
+
+def test_on_token_callback_failure_isolated(pair, oracle):
+    """A raising on_token callback fails only ITS request: the victim
+    lands in server.failed with the error recorded and its slot
+    released; every other request completes bit-identically."""
+    tp, dp = pair
+    eng = CachedSpecDecEngine((tp, TCFG), (dp, DCFG), SD, pool_slots=2)
+    srv = SpecDecServer(eng, max_batch=2, cache_mode="kv",
+                        min_buf_len=_min_buf())
+    streamed = []
+
+    def cb(uid, tok):
+        streamed.append((uid, tok))
+        if uid == 1 and len([t for u, t in streamed if u == 1]) == 2:
+            raise RuntimeError("consumer hung up")
+
+    for p in PROMPTS:
+        srv.submit(p, max_new=MAX_NEW, on_token=cb)
+    done = srv.run(KEY)
+    got = {r.uid: list(r.output) for r in done}
+    assert set(got) == {2, 3, 4}  # uids start at 1; uid 1 failed
+    assert all(got[u] == oracle[u] for u in got)
+    assert [r.uid for r in srv.failed] == [1]
+    assert "on_token callback raised" in srv.failed[0].error
+    assert "consumer hung up" in srv.failed[0].error
+    assert srv.metrics.callback_errors == 1
+    assert eng.pool.num_free == eng.pool.num_slots, \
+        "failed request leaked its slot"
+    # Tokens streamed before the failure match the victim's record.
+    assert [t for u, t in streamed if u == 1] == srv.failed[0].output[:2]
+
+
+# ---- chaos replay bit-identity ---------------------------------------
+
+
+def test_chaos_replay_bit_identical_paged_v2(pair, oracle):
+    """The tentpole gate at test scale: heavy injection of every fault
+    class into the full stack (kv_fused + paged arena + v2), survivors
+    bit-identical to the fault-free reference, every fault counted."""
+    plan = FaultPlan.uniform(0.15, seed=2)
+    eng, srv = _paged_server(pair, fault_plan=plan, retry_budget=3)
+    got = _serve(srv)
+    m = srv.metrics
+    assert m.faults_total > 0, "seed injected nothing — tune it"
+    assert m.retries == m.faults_total
+    assert m.completed + m.quarantined == len(PROMPTS)
+    assert all(got[u] == oracle[u] for u in got)
+    assert eng.pool.num_free == eng.pool.num_slots
+    st = eng.page_state()
+    assert st["free"] == st["total"], "recovery leaked pages"
+
+
+def test_targeted_nan_poisoning_quarantines_victim(pair, oracle):
+    """nan_logits at rate 1.0 for one uid: every retry refaults, the
+    retry budget trips, the victim quarantines with a recorded error —
+    and the poisoning never taints anyone else (arenas scrubbed)."""
+    plan = FaultPlan(seed=0, nan_logits=1.0, only_uids=(2,))
+    eng, srv = _paged_server(pair, fault_plan=plan, retry_budget=1)
+    got = _serve(srv)
+    assert set(got) == {1, 3, 4}  # uids start at 1; uid 2 quarantined
+    assert all(got[u] == oracle[u] for u in got)
+    assert srv.metrics.quarantined == 1
+    assert [r.uid for r in srv.failed] == [2]
+    assert srv.failed[0].error.startswith("quarantined:")
+    assert srv.failed[0].retries == 2  # budget 1 → quarantined on fault 2
+    assert srv.metrics.faults.get("nan_logits", 0) >= 2, \
+        "poisoned outcomes must be caught and attributed to injection"
+    st = eng.page_state()
+    assert st["free"] == st["total"]
+
+
+def test_real_pool_exhaustion_converts_to_displacement(pair, oracle):
+    """Satellite: a REAL PagePoolExhausted raised mid-trace under a
+    guarded v2 server converts into displacement (suspend/evict +
+    requeue) instead of killing the trace, and the displaced requests
+    finish bit-identically on re-admission."""
+    eng, srv = _paged_server(pair, retry_budget=2)
+    for p in PROMPTS:
+        srv.submit(p, max_new=MAX_NEW)
+    # The pool exists only after the first admission — run one round,
+    # then make the NEXT reserve raise a real exhaustion mid-trace.
+    done = list(srv.step(KEY))
+    state = {"calls": 0, "raised": False}
+    real_reserve = eng.pool.reserve
+
+    def flaky_reserve(*a, **kw):
+        state["calls"] += 1
+        if state["calls"] == 2 and not state["raised"]:
+            state["raised"] = True
+            raise PagePoolExhausted("injected real exhaustion")
+        return real_reserve(*a, **kw)
+
+    eng.pool.reserve = flaky_reserve
+    done.extend(srv.run(KEY))
+    got = {r.uid: list(r.output) for r in done}
+    assert state["raised"], "trace never reached the flaky reserve"
+    assert set(got) == set(oracle)
+    assert got == oracle
+    assert srv.metrics.faults == {"pool_exhausted": 1}
+    assert srv.metrics.retries == 1
+    st = eng.page_state()
+    assert st["free"] == st["total"]
+
+
+def test_unguarded_server_stays_loud(pair):
+    """Without any fault knob the recovery layer must stay out of the
+    way: a PagePoolExhausted propagates to the caller exactly as
+    before (the §12 loud-exhaustion contract)."""
+    eng, srv = _paged_server(pair)
+    assert not srv.guarded
+    srv.submit(PROMPTS[0], max_new=MAX_NEW)
+    srv.step(KEY)  # first round creates the pool
+
+    def always_raise(*a, **kw):
+        raise PagePoolExhausted("budget exceeded")
+
+    eng.pool.reserve = always_raise
+    with pytest.raises(PagePoolExhausted):
+        srv.run(KEY)
+
+
+# ---- watchdog --------------------------------------------------------
+
+
+def test_watchdog_trips_replays_then_accepts(pair, oracle):
+    """An unreachable round budget trips the watchdog every round; the
+    first trip discards and replays (bit-identically), and once
+    consecutive trips exceed the retry budget the accept valve takes
+    the late-but-valid round instead of livelocking."""
+    eng, srv = _paged_server(pair, round_timeout_ms=0.01, retry_budget=0)
+    got = _serve(srv)
+    m = srv.metrics
+    assert got == oracle
+    assert m.watchdog_trips > 0
+    assert m.watchdog_accepts > 0
+    assert m.faults.get("watchdog", 0) == m.retries
+    st = eng.page_state()
+    assert st["free"] == st["total"]
+
+
+# ---- degradation ladder ----------------------------------------------
+
+
+def test_degradation_ladder_walks_to_reference(pair, oracle):
+    """Repeated kernel-dispatch faults at degrade_after=1 walk the
+    ladder kv_fused -> kv -> reprefill; the server keeps serving on the
+    reference path and the tokens never change — mid-serve mode
+    transitions are token-invisible."""
+    plan = FaultPlan(seed=4, kernel_dispatch=0.5)
+    eng, srv = _paged_server(pair, fault_plan=plan, retry_budget=6,
+                             degrade_after=1)
+    got = _serve(srv)
+    m = srv.metrics
+    steps = [d["step"] for d in m.degradations]
+    assert steps[:2] == ["cache:kv_fused->kv", "cache:kv->reprefill"]
+    assert srv.cache_mode == "reprefill"
+    assert m.faults.get("kernel_dispatch", 0) >= 2
+    assert all(got[u] == oracle[u] for u in got)
+    assert m.completed + m.quarantined == len(PROMPTS)
+    st = eng.page_state()
+    assert st["free"] == st["total"]

@@ -220,6 +220,50 @@ def test_flash_attention_fully_masked_rows_emit_zeros():
     assert (np.abs(out[1]) > 0).any()
 
 
+def test_masked_row_policy_ref_and_kernel_agree_bitwise():
+    """Satellite (DESIGN.md §13): ref.py's ``masked_softmax`` and the
+    kernel share one masked-row contract — fully-masked rows (kv_len 0,
+    or every score windowed out to -inf) emit EXACTLY 0.0 in both
+    paths, with no NaN-then-scrub step.  The old reference scrubbed
+    ``isnan`` after softmax while the kernel guarded its running max
+    with ``isfinite``; this pins their bitwise agreement on every
+    masked-row shape."""
+    from repro.kernels.flash_attention.ref import masked_softmax
+    key = jax.random.PRNGKey(5)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (3, 2, 8, 16), jnp.float32)
+    k = jax.random.normal(kk, (3, 2, 16, 16), jnp.float32)
+    v = jax.random.normal(kv, (3, 2, 16, 16), jnp.float32)
+    # Row 0: kv_len == 0 (bucket padding).  Row 1: sliding window with
+    # q_offset far past kv_len — every key is simultaneously below the
+    # window and beyond kv_len, so all 8 query rows score -inf
+    # everywhere.  Row 2: ordinary.
+    q_off = jnp.array([0, 12, 0], jnp.int32)
+    kv_len = jnp.array([0, 3, 16], jnp.int32)
+    out = np.asarray(flash_attention(q, k, v, q_off, kv_len, causal=True,
+                                     window=2, tq=8, tk=8,
+                                     interpret=True))
+    ref = np.asarray(flash_attention_ref(q, k, v, q_off, kv_len,
+                                         causal=True, window=2))
+    assert np.isfinite(ref).all() and np.isfinite(out).all()
+    assert (ref[0] == 0.0).all() and (out[0] == 0.0).all()
+    assert (ref[1] == 0.0).all() and (out[1] == 0.0).all()
+    assert (np.abs(ref[2]) > 0).any()
+    # Masked rows agree BITWISE (exact zeros on both sides).
+    np.testing.assert_array_equal(out[:2], ref[:2])
+    # masked_softmax on a fully-masked row: all-zero weights, and on
+    # rows with >= 1 valid entry it is bitwise jax.nn.softmax of the
+    # -inf-masked scores (the 1e-30 denominator floor is inert).
+    scores = jax.random.normal(key, (4, 6), jnp.float32)
+    mask = jnp.array([[True] * 6, [False] * 6,
+                      [True] + [False] * 5, [False, True] + [True] * 4])
+    w = np.asarray(masked_softmax(scores, mask))
+    assert (w[1] == 0.0).all()
+    dense = np.asarray(jax.nn.softmax(
+        jnp.where(mask, scores, -jnp.inf), axis=-1))
+    np.testing.assert_array_equal(w[[0, 2, 3]], dense[[0, 2, 3]])
+
+
 # ---------------------------------------------------------------------------
 # decode_attention
 # ---------------------------------------------------------------------------
